@@ -1,0 +1,35 @@
+"""Fig 3: adaptive SplitFT vs Same-Split baseline, IID + Dirichlet alphas.
+
+ baseline: fixed cut=2 for all clients, IID data (the paper's Same Split);
+ splitft:  adaptive cuts under length-Dirichlet with
+           alpha in {0.1, 0.9, 10, 100} and IID.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import bench_arch, row, run_experiment
+
+
+def run() -> List[dict]:
+    rows = []
+    # Same-Split baseline (iid, fixed cut)
+    arch = bench_arch(cut=2, adaptive=False, partition="iid")
+    rows.append(row("adaptive/baseline_same_split_iid",
+                    run_experiment(arch)))
+    # Adaptive, IID
+    arch = bench_arch(cut=2, adaptive=True, partition="iid")
+    rows.append(row("adaptive/splitft_iid", run_experiment(arch)))
+    # Adaptive, non-IID sweep
+    for alpha in (0.1, 0.9, 10.0, 100.0):
+        arch = bench_arch(cut=2, adaptive=True, partition="dirichlet",
+                          alpha=alpha)
+        res = run_experiment(arch)
+        rows.append(row(f"adaptive/splitft_alpha={alpha}", res))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

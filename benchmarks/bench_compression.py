@@ -1,0 +1,38 @@
+"""Beyond-paper: adapter-sync compression ablation.
+
+The paper reduces FedAvg bytes via r_cut; we stack top-k+error-feedback
+sparsification and int8 quantization on the adapter deltas and measure the
+accuracy cost at matching round counts.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import (EVAL_SAMPLES, SAMPLES, bench_arch, row,
+                               run_experiment)
+from repro.core.system import SystemConfig
+
+
+def run() -> List[dict]:
+    rows = []
+    for name, compress, frac in (("none", "none", 0.0),
+                                 ("topk_25", "topk", 0.25),
+                                 ("topk_5", "topk", 0.05),
+                                 ("int8", "int8", 0.0)):
+        arch = bench_arch(cut=2, adaptive=True)
+        cfg = SystemConfig(num_samples=SAMPLES, eval_samples=EVAL_SAMPLES,
+                           compress=compress, topk_frac=frac)
+        res = run_experiment(arch, sys_cfg=cfg)
+        r = row(f"compression/{name}", res)
+        # effective adapter-sync ratio
+        ratio = {"none": 1.0, "topk_25": 0.25 * 2, "topk_5": 0.05 * 2,
+                 "int8": 0.25}[name]   # topk ships values+indices
+        r["comm_round_mb"] = res["comm_round_mb"] * ratio
+        rows.append(r)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,35 @@
+"""Table I / Fig 2(b): cut-layer sweep {2,4,6,8,10} + NoCut.
+
+Measures max accuracy, elapsed/round time and communication overhead as a
+function of the cut position, with LoRA rank 8 at the cut (paper setup).
+"NoCut" = all layers on the client (classical federated LoRA; the server
+trains nothing), reproducing the paper's federated baseline column.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import bench_arch, row, run_experiment
+
+
+def run() -> List[dict]:
+    rows = []
+    for cut in (2, 4, 6, 8, 10):
+        arch = bench_arch(cut=cut, adaptive=False, r_cut=8, r_others=8)
+        res = run_experiment(arch)
+        r = row(f"cutlayer/{cut}", res)
+        r["mean_round_s"] = res["round_time_s"]
+        rows.append(r)
+    # NoCut: the whole (12-layer) model client-side
+    arch = bench_arch(cut=12, adaptive=False, r_cut=8, r_others=8)
+    res = run_experiment(arch)
+    r = row("cutlayer/no_cut", res)
+    r["mean_round_s"] = res["round_time_s"]
+    rows.append(r)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,88 @@
+"""Kernel microbenchmarks (CPU: jnp reference path timings; the Pallas
+kernels are TPU-targeted and validated in interpret mode by the tests).
+
+us_per_call = wall time per op; derived = achieved GFLOP/s on this host.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import ops as dec_ops
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.lora_matmul import ops as lora_ops
+from repro.kernels.ssd_scan import ops as ssd_ops
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def run() -> List[dict]:
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    # fused LoRA matmul
+    m, k, n, r = 512, 1024, 1024, 16
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (m, k))
+    w = jax.random.normal(ks[1], (k, n)) * 0.02
+    a = jax.random.normal(ks[2], (k, r)) * 0.02
+    b = jax.random.normal(ks[3], (r, n)) * 0.02
+    f = jax.jit(lambda *t: lora_ops.lora_matmul(*t, jnp.float32(0.5)))
+    dt = _time(f, x, w, a, b)
+    flops = 2 * m * k * n + 2 * m * r * (k + n)
+    rows.append({"name": f"kernels/lora_matmul_{m}x{k}x{n}",
+                 "us_per_call": dt * 1e6, "derived": flops / dt / 1e9})
+
+    # flash attention (ref path) and chunked path
+    bsz, s, h, hd = 2, 1024, 8, 64
+    q = jax.random.normal(ks[0], (bsz, s, h, hd))
+    kk = jax.random.normal(ks[1], (bsz, s, h // 2, hd))
+    v = jax.random.normal(ks[2], (bsz, s, h // 2, hd))
+    f = jax.jit(lambda *t: fa_ops.flash_attention(*t))
+    dt = _time(f, q, kk, v)
+    flops = 4 * bsz * h * s * s * hd // 2   # causal
+    rows.append({"name": f"kernels/flash_attention_s{s}",
+                 "us_per_call": dt * 1e6, "derived": flops / dt / 1e9})
+
+    # decode attention
+    q1 = jax.random.normal(ks[0], (8, h, hd))
+    kc = jax.random.normal(ks[1], (8, 4096, h // 2, hd))
+    vc = jax.random.normal(ks[2], (8, 4096, h // 2, hd))
+    clen = jnp.full((8,), 4096, jnp.int32)
+    f = jax.jit(lambda *t: dec_ops.decode_attention(*t))
+    dt = _time(f, q1, kc, vc, clen)
+    bytes_moved = 2 * kc.size * 4
+    rows.append({"name": "kernels/decode_attention_s4096",
+                 "us_per_call": dt * 1e6,
+                 "derived": bytes_moved / dt / 1e9})
+
+    # SSD scan
+    bs, ss, hh, pp, g, nn = 2, 512, 8, 64, 1, 64
+    x2 = jax.random.normal(ks[0], (bs, ss, hh, pp))
+    dtp = jax.nn.softplus(jax.random.normal(ks[1], (bs, ss, hh)))
+    aa = -jnp.exp(jax.random.normal(ks[2], (hh,)) * 0.5)
+    bm = jax.random.normal(ks[3], (bs, ss, g, nn)) * 0.3
+    cm = jax.random.normal(ks[0], (bs, ss, g, nn)) * 0.3
+    f = jax.jit(lambda *t: ssd_ops.ssd_scan(*t, chunk=128))
+    dt = _time(f, x2, dtp, aa, bm, cm)
+    flops = 2 * bs * ss * 128 * hh * (pp + nn)  # intra-chunk dominant
+    rows.append({"name": f"kernels/ssd_scan_s{ss}",
+                 "us_per_call": dt * 1e6, "derived": flops / dt / 1e9})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,27 @@
+"""Table II / Fig 2(c): cut-layer LoRA rank sweep {1,2,4,8}.
+
+Cut fixed at layer 2 (paper), r_others = 16; only the cut-layer rank
+varies.  Shows the paper's claim: smaller r_cut cuts communication with
+nearly unchanged convergence/accuracy.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import bench_arch, row, run_experiment
+
+
+def run() -> List[dict]:
+    rows = []
+    for r_cut in (1, 2, 4, 8):
+        arch = bench_arch(cut=2, adaptive=False, r_cut=r_cut, r_others=16)
+        res = run_experiment(arch)
+        r = row(f"lora_rank/r_cut={r_cut}", res)
+        rows.append(r)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,29 @@
+"""Fig 4: generalizability across GPT2-small / OPT-125M / GPT-Neo-125M.
+
+Each model runs adaptive SplitFT under IID and non-IID (alpha=0.9)
+partitions; the figure's claim is consistent behaviour across
+architectures (learned-pos GELU GPT2, ReLU OPT, local-attention GPT-Neo).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import bench_arch, row, run_experiment
+
+
+def run() -> List[dict]:
+    rows = []
+    for name in ("gpt2-small", "opt-125m", "gpt-neo-125m"):
+        for part, alpha in (("iid", 0.9), ("dirichlet", 0.9)):
+            arch = bench_arch(name, adaptive=True, partition=part,
+                              alpha=alpha)
+            res = run_experiment(arch)
+            tag = "iid" if part == "iid" else f"alpha={alpha}"
+            rows.append(row(f"models/{name}/{tag}", res))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

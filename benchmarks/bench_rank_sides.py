@@ -1,0 +1,33 @@
+"""Fig 2(a): where to reduce the cut-layer rank.
+
+ 1. no_cutlayer       — rank 16 everywhere (no reduction);
+ 2. client_side_only  — r_cut=8 on the last client layer only;
+ 3. two_side          — r_cut=8 on both sides of the cut (paper's winner).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import bench_arch, row, run_experiment
+
+
+def run() -> List[dict]:
+    cases = [
+        ("rank_sides/no_cutlayer", dict(r_cut=16, r_others=16,
+                                        two_side=False)),
+        ("rank_sides/client_side", dict(r_cut=8, r_others=16,
+                                        two_side=False)),
+        ("rank_sides/two_side", dict(r_cut=8, r_others=16, two_side=True)),
+    ]
+    rows = []
+    for name, kw in cases:
+        arch = bench_arch(cut=2, adaptive=False, **kw)
+        res = run_experiment(arch)
+        rows.append(row(name, res))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,110 @@
+"""Shared benchmark scaffolding.
+
+Every benchmark reproduces one paper table/figure.  Scale is controlled by
+BENCH_SCALE:
+  smoke (default) — narrow 12-layer models, ~tens of rounds: minutes on
+                    CPU, demonstrates every comparison direction;
+  full            — the paper's GPT2-small scale (12 blocks, d=768,
+                    seq 512, 12k samples/client): hours on CPU, use on a
+                    real machine.
+
+Output convention (consumed by benchmarks.run): each bench returns rows
+[{name, us_per_call, derived, **extra}] where us_per_call is the measured
+round wall-time and `derived` the figure's headline metric.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.config import ArchConfig, reduced
+from repro.configs import get_config
+from repro.core.system import SplitFTSystem, SystemConfig
+
+FULL = os.environ.get("BENCH_SCALE") == "full"
+
+ROUNDS = 200 if FULL else 30
+SAMPLES = 12000 if FULL else 400
+EVAL_SAMPLES = 512 if FULL else 64
+
+
+def bench_arch(name: str = "gpt2-small", *, layers: int = 12,
+               cut: Optional[int] = None, r_cut: Optional[int] = None,
+               r_others: Optional[int] = None,
+               adaptive: Optional[bool] = None,
+               partition: Optional[str] = None,
+               alpha: Optional[float] = None,
+               two_side: Optional[bool] = None,
+               lr: float = 3e-3) -> ArchConfig:
+    arch = get_config(name)
+    if not FULL:
+        arch = reduced(arch, layers=layers, d_model=64, vocab=2048,
+                       seq_len=64, batch=4)
+        arch = arch.replace(train=dataclasses.replace(
+            arch.train, lr_client=lr, lr_server=lr))
+        arch = arch.replace(data=dataclasses.replace(
+            arch.data, num_clients=5))
+    kw: Dict[str, Any] = {}
+    if cut is not None or adaptive is not None:
+        arch = arch.replace(split=dataclasses.replace(
+            arch.split,
+            cut_layer=cut if cut is not None else arch.split.cut_layer,
+            adaptive=(adaptive if adaptive is not None
+                      else arch.split.adaptive)))
+    if r_cut is not None or r_others is not None or two_side is not None:
+        arch = arch.replace(lora=dataclasses.replace(
+            arch.lora,
+            r_cut=r_cut if r_cut is not None else arch.lora.r_cut,
+            r_others=(r_others if r_others is not None
+                      else arch.lora.r_others),
+            two_side_cut=(two_side if two_side is not None
+                          else arch.lora.two_side_cut)))
+    if partition is not None or alpha is not None:
+        arch = arch.replace(data=dataclasses.replace(
+            arch.data,
+            partition=partition or arch.data.partition,
+            alpha=alpha if alpha is not None else arch.data.alpha))
+    return arch
+
+
+def run_experiment(arch: ArchConfig, *, rounds: int = ROUNDS,
+                   sys_cfg: Optional[SystemConfig] = None,
+                   seed: int = 0) -> Dict[str, Any]:
+    cfg = sys_cfg or SystemConfig(num_samples=SAMPLES,
+                                  eval_samples=EVAL_SAMPLES)
+    system = SplitFTSystem(arch, cfg, seed=seed)
+    t0 = time.time()
+    hist = system.run(rounds, log_every=0)
+    wall = time.time() - t0
+    final = system.evaluate(num_batches=2)
+    accs = np.array([h["accuracy"].mean() for h in hist])
+    comm = np.array([np.sum(h["comm"]) for h in hist])
+    return {
+        "history": hist,
+        "final": final,
+        "max_accuracy": float(accs.max()),
+        "elapsed_s": wall,
+        "round_time_s": wall / max(rounds, 1),
+        "comm_total_mb": float(comm.sum() / 1e6),
+        "comm_round_mb": float(comm.mean() / 1e6),
+        "final_cuts": hist[-1]["cuts"].tolist(),
+    }
+
+
+def row(name: str, res: Dict[str, Any], derived_key: str = "perplexity"
+        ) -> Dict[str, Any]:
+    derived = res["final"].get(derived_key, res["final"]["perplexity"])
+    return {
+        "name": name,
+        "us_per_call": res["round_time_s"] * 1e6,
+        "derived": derived,
+        "max_acc": res["max_accuracy"],
+        "ppl": res["final"]["perplexity"],
+        "comm_round_mb": res["comm_round_mb"],
+        "cuts": res["final_cuts"],
+    }

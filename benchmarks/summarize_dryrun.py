@@ -1,0 +1,63 @@
+"""Turn results/dryrun.json into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m benchmarks.summarize_dryrun [results/dryrun.json]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_cell(c):
+    r = c["roofline"]
+    gib = c["bytes_per_device"] / 2 ** 30
+    return (f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+            f"{gib:.1f} | {'Y' if c['fits_hbm'] else 'N'} | "
+            f"{r['compute_s']:.3f} | {r['memory_s']:.3f} | "
+            f"{r['collective_s']:.3f} | {r['dominant'].replace('_s','')} | "
+            f"{r.get('useful_fraction', 0):.2f} | "
+            f"{r.get('roofline_fraction', 0):.2f} |")
+
+
+def main(path="results/dryrun.json"):
+    with open(path) as f:
+        cells = json.load(f)
+    ok = [c for c in cells if c.get("status") == "ok"]
+    skip = [c for c in cells if c.get("status") == "skipped"]
+    err = [c for c in cells if c.get("status") == "error"]
+
+    print("| arch | shape | mesh | GiB/dev | fits | compute_s | memory_s |"
+          " coll_s | bound | useful | roofline |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for c in sorted(ok, key=lambda c: (c["arch"], c["shape"], c["mesh"])):
+        print(fmt_cell(c))
+    print()
+    for c in skip:
+        print(f"SKIP {c['arch']} x {c['shape']} [{c['mesh']}]: "
+              f"{c['reason']}")
+    for c in err:
+        print(f"ERROR {c['arch']} x {c['shape']} [{c['mesh']}]: "
+              f"{c.get('error', '?')[:200]}")
+    print(f"\n{len(ok)} ok / {len(skip)} skipped / {len(err)} errors "
+          f"of {len(cells)}")
+
+    # hillclimb candidates
+    worst = sorted(
+        (c for c in ok if c["shape"] == "train_4k"
+         and c["mesh"] == "16x16"),
+        key=lambda c: c["roofline"].get("roofline_fraction", 1.0))
+    coll = sorted(
+        (c for c in ok if c["mesh"] == "16x16"),
+        key=lambda c: -c["roofline"]["collective_s"]
+        / max(c["roofline"]["step_s_lower_bound"], 1e-12))
+    if worst:
+        print("\nworst roofline fraction (train):",
+              [f"{c['arch']}/{c['shape']}" for c in worst[:3]])
+    if coll:
+        print("most collective-bound:",
+              [f"{c['arch']}/{c['shape']}" for c in coll[:3]])
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

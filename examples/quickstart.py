@@ -1,0 +1,40 @@
+"""Quickstart: fine-tune GPT2-small with SplitFT on synthetic data.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs a smoke-scale federated split fine-tuning job (5 clients, adaptive
+cut layers, length-Dirichlet non-IID partition) and prints the perplexity
+trajectory — the whole paper workflow in ~a minute on CPU.
+"""
+
+import dataclasses
+
+import numpy as np
+
+from repro.config import reduced
+from repro.configs import get_config
+from repro.core.system import SplitFTSystem, SystemConfig
+
+# paper model, shrunk to smoke scale (12 blocks -> 6, d=64)
+arch = reduced(get_config("gpt2-small"), layers=6, d_model=64,
+               vocab=2048, seq_len=64, batch=4)
+arch = arch.replace(
+    train=dataclasses.replace(arch.train, lr_client=3e-3, lr_server=3e-3),
+    data=dataclasses.replace(arch.data, partition="dirichlet", alpha=0.9,
+                             num_clients=5),
+)
+
+system = SplitFTSystem(arch, SystemConfig(num_samples=400,
+                                          eval_samples=64), seed=0)
+print(f"clients: {arch.data.num_clients}, "
+      f"initial cut: {arch.split.cut_layer}, "
+      f"r_cut={arch.lora.r_cut} r_others={arch.lora.r_others}")
+
+history = system.run(30, log_every=10)
+
+final = system.evaluate()
+print(f"\nfinal: perplexity={final['perplexity']:.1f} "
+      f"accuracy={final['accuracy']:.4f}")
+print(f"cut trajectory: {[h['cuts'].tolist() for h in history[::10]]}")
+print(f"per-round comm (MB/client): "
+      f"{np.round(history[-1]['comm'] / 1e6, 2).tolist()}")

@@ -1,0 +1,25 @@
+from repro.config.base import (
+    SHAPES,
+    ArchConfig,
+    DataConfig,
+    LoRAConfig,
+    MeshConfig,
+    ModelConfig,
+    ShapeConfig,
+    SplitConfig,
+    TrainConfig,
+    reduced,
+)
+
+__all__ = [
+    "SHAPES",
+    "ArchConfig",
+    "DataConfig",
+    "LoRAConfig",
+    "MeshConfig",
+    "ModelConfig",
+    "ShapeConfig",
+    "SplitConfig",
+    "TrainConfig",
+    "reduced",
+]

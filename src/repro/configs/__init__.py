@@ -1,0 +1,58 @@
+"""Architecture config registry.
+
+Each module in this package defines ``config() -> ArchConfig`` with the exact
+assigned hyperparameters.  ``get_config(name)`` resolves by registry id
+(dashes or underscores both accepted).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.config import ArchConfig
+
+# registry id -> module name
+_REGISTRY: Dict[str, str] = {
+    # -- assigned pool (10) -------------------------------------------------
+    "internvl2-76b": "internvl2_76b",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "qwen1.5-32b": "qwen1p5_32b",
+    "phi4-mini-3.8b": "phi4_mini_3p8b",
+    "llama3-8b": "llama3_8b",
+    "mistral-large-123b": "mistral_large_123b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "mamba2-780m": "mamba2_780m",
+    "whisper-medium": "whisper_medium",
+    # -- the paper's own models (Fig 4) ------------------------------------
+    "gpt2-small": "gpt2_small",
+    "opt-125m": "opt_125m",
+    "gpt-neo-125m": "gpt_neo_125m",
+}
+
+ASSIGNED = [
+    "internvl2-76b", "zamba2-1.2b", "qwen1.5-32b", "phi4-mini-3.8b",
+    "llama3-8b", "mistral-large-123b", "kimi-k2-1t-a32b",
+    "llama4-maverick-400b-a17b", "mamba2-780m", "whisper-medium",
+]
+
+PAPER_MODELS = ["gpt2-small", "opt-125m", "gpt-neo-125m"]
+
+
+def _canon(name: str) -> str:
+    n = name.lower().replace("_", "-")
+    aliases = {f"{k.replace('-', '_')}": k for k in _REGISTRY}
+    return aliases.get(name, n)
+
+
+def get_config(name: str) -> ArchConfig:
+    key = _canon(name)
+    if key not in _REGISTRY:
+        raise KeyError(f"unknown architecture {name!r}; known: {sorted(_REGISTRY)}")
+    mod = importlib.import_module(f"repro.configs.{_REGISTRY[key]}")
+    return mod.config()
+
+
+def list_configs() -> List[str]:
+    return sorted(_REGISTRY)

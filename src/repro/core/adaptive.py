@@ -1,0 +1,58 @@
+"""Adaptive layer allocation (paper C3).
+
+Weight rule (paper §III-C):
+    acc_i > acc_avg:  w_i = 1 + gamma * (acc_i - acc_avg)
+    acc_i < acc_avg:  w_i = 1 - gamma * (acc_avg - acc_i)
+(one expression: w_i = 1 + gamma * (acc_i - acc_avg), clipped positive).
+
+Cut adjustment: clients whose accuracy exceeds the fleet average take MORE
+layers (they "assume greater computational responsibilities"); clients
+below average shed layers.  Movement is restricted to the config's static
+cut-bucket set, one bucket per round, with a dead-band so noise does not
+thrash the allocation.  Buckets keep the policy compatible with the
+mask-based split: any bucket assignment runs in the same executable.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import numpy as np
+
+from repro.config import SplitConfig
+
+
+def update_weights(accs: Sequence[float], gamma: float) -> np.ndarray:
+    accs = np.asarray(accs, np.float64)
+    avg = accs.mean()
+    w = 1.0 + gamma * (accs - avg)
+    return np.clip(w, 0.05, None)
+
+
+def adjust_cuts(cuts: Sequence[int], accs: Sequence[float],
+                split: SplitConfig, num_layers: int, *,
+                dead_band: float = 0.002,
+                round_times: Sequence[float] = None) -> np.ndarray:
+    """One adjustment step.  Returns the new cut array.
+
+    Accuracy drives direction (paper rule); if round_times are provided,
+    a client that is BOTH below-average accuracy and above-deadline slow
+    moves down two buckets (straggler fast path)."""
+    cuts = np.asarray(cuts, int)
+    accs = np.asarray(accs, np.float64)
+    buckets = np.asarray(split.buckets(num_layers), int)
+    avg = accs.mean()
+    new = cuts.copy()
+    slow = None
+    if round_times is not None:
+        rt = np.asarray(round_times, np.float64)
+        slow = rt > 1.5 * np.median(rt)
+    for i, c in enumerate(cuts):
+        pos = int(np.argmin(np.abs(buckets - c)))
+        if accs[i] > avg + dead_band:
+            pos = min(pos + 1, len(buckets) - 1)
+        elif accs[i] < avg - dead_band:
+            step = 2 if (slow is not None and slow[i]) else 1
+            pos = max(pos - step, 0)
+        new[i] = buckets[pos]
+    return new

@@ -1,0 +1,84 @@
+"""Client-side LoRA FedAvg (paper b1-b4), mask- and membership-aware.
+
+Aggregation for (group g, target t, layer l):
+
+    agg[l] = sum_i mu_i(l) * X[i, l] / sum_i mu_i(l)
+    mu_i(l) = w_i * active_i * client_mask_i(l)
+
+i.e. only clients that (a) are active this round (straggler/elastic
+survivors) and (b) actually own layer l contribute.  Layers owned by no
+active client keep their previous value.
+
+After aggregation every client's row is refreshed: owned layers get the
+aggregate (paper b3); dormant rows mirror the server adapters so that a
+future cut increase hands the layer over seamlessly (the generalization
+of b4 to heterogeneous cuts — DESIGN.md §3).
+
+On a mesh the weighted sums are einsums over the client axis, which XLA
+lowers to reduce-scatter/all-reduce over the `data` axis — the "Local
+FedAvg Server" is a collective schedule, not a host.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.split import client_layer_masks, group_masks
+from repro.models.model import Model
+
+Params = Dict[str, Any]
+
+
+def fedavg(model: Model, client_adapters: Params, cuts, weights,
+           active) -> Params:
+    """Aggregate: returns the rank-2 (per-layer, no client axis) tree."""
+    masks = client_layer_masks(model.num_flat_layers, cuts)     # (N, M)
+    w = (jnp.asarray(weights, jnp.float32)
+         * jnp.asarray(active, jnp.float32))
+
+    out: Params = {}
+    for gname, targets in client_adapters.items():
+        g = model.group_by_name[gname]
+        ids = jnp.asarray(g.layer_ids)
+        mu = jnp.moveaxis(jnp.take(masks, ids, axis=1), 1, 0) * w  # (Lg,N)
+        denom = jnp.maximum(jnp.sum(mu, axis=1), 1e-9)             # (Lg,)
+        out[gname] = {}
+        for tname, ad in targets.items():
+            agg_a = jnp.einsum("ln,ln...->l...", mu, ad["A"]) \
+                / denom[:, None, None]
+            agg_b = jnp.einsum("ln,ln...->l...", mu, ad["B"]) \
+                / denom[:, None, None]
+            out[gname][tname] = {"A": agg_a, "B": agg_b}
+    return out
+
+
+def broadcast_after_agg(model: Model, client_adapters: Params,
+                        aggregated: Params, server_adapters: Params,
+                        cuts) -> Params:
+    """Refresh client rows: owned layers <- aggregate; dormant <- server."""
+    masks = client_layer_masks(model.num_flat_layers, cuts)
+    gmasks = group_masks(model, masks)                          # (Lg,N,1,1)
+
+    out: Params = {}
+    for gname, targets in client_adapters.items():
+        m = gmasks[gname]
+        out[gname] = {}
+        for tname, ad in targets.items():
+            agg = aggregated[gname][tname]
+            srv = server_adapters[gname][tname]
+            out[gname][tname] = {
+                "A": m * agg["A"][:, None] + (1 - m) * srv["A"][:, None],
+                "B": m * agg["B"][:, None] + (1 - m) * srv["B"][:, None],
+            }
+    return out
+
+
+def adapter_delta(new: Params, old: Params) -> Params:
+    return jax.tree.map(lambda a, b: a - b, new, old)
+
+
+def apply_delta(base: Params, delta: Params) -> Params:
+    return jax.tree.map(lambda a, b: a + b, base, delta)

@@ -1,0 +1,64 @@
+"""Analytic communication accounting (the paper's 'Comm Overhead' column).
+
+Per global round, per client i with cut m_i:
+
+  smashed up     = B * S * d_model * bytes            (f2)
+  smashed down   = B * S * d_model * bytes            (f4, gradients)
+  adapter up     = sum_{l < m_i} r_eff(l) * (d_in+d_out) * bytes   (b1)
+  adapter down   = same (b3 broadcast)
+
+r_eff comes from the C2 rank policy, so the saving from r_cut < r_others
+is visible directly here; compression (top-k / int8) multiplies the
+adapter terms by its measured ratio.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import numpy as np
+
+from repro.config import ArchConfig
+from repro.models.model import Model
+
+
+def round_comm_bytes(model: Model, *, cuts: Sequence[int], batch_size: int,
+                     seq_len: int, dtype_bytes: int = 4,
+                     compress_ratio: float = 1.0) -> Dict[str, np.ndarray]:
+    arch = model.arch
+    lora = arch.lora
+    m = arch.model
+    cuts = np.asarray(cuts, int)
+    n = len(cuts)
+
+    smashed = batch_size * seq_len * m.d_model * dtype_bytes
+    smashed_up = np.full(n, smashed, np.float64)
+    smashed_down = np.full(n, smashed, np.float64)
+
+    spec = model.adapter_spec()
+    layer_cost_cut = 0.0
+    layer_cost_other = 0.0
+    flat_dims = {}
+    for gname, targets in spec.items():
+        g = model.group_by_name[gname]
+        per_rank = sum(din + dout for din, dout in targets.values())
+        for fid in g.layer_ids:
+            flat_dims[fid] = per_rank
+
+    adapter_up = np.zeros(n, np.float64)
+    for i, cut in enumerate(cuts):
+        total = 0.0
+        for l in range(cut):
+            per_rank = flat_dims.get(l, 0)
+            r = lora.rank_for_layer(l, cut)
+            total += r * per_rank
+        adapter_up[i] = total * dtype_bytes * compress_ratio
+    adapter_down = adapter_up.copy()
+
+    return {
+        "smashed_up": smashed_up,
+        "smashed_down": smashed_down,
+        "adapter_up": adapter_up,
+        "adapter_down": adapter_down,
+        "total": smashed_up + smashed_down + adapter_up + adapter_down,
+    }

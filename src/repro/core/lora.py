@@ -1,0 +1,120 @@
+"""LoRA adapter trees and the paper's per-layer rank policy (C2).
+
+Key systems idea (DESIGN.md §3): adapters are allocated at the *maximum*
+rank (r_others) for every layer and every client; the effective rank of a
+layer is imposed by a multiplicative **rank mask** (zeroing A columns /
+B rows beyond r_eff).  A rank-r_cut LoRA is mathematically exactly the
+masked rank-r_others LoRA, so:
+
+  * the paper's r_cut-at-the-cut-layer policy costs one `where`, not a
+    reshape;
+  * adaptive cut movement (C3) re-ranks layers without changing any array
+    shape — no recompilation, ever;
+  * communication accounting charges only the *effective* entries (the
+    masked entries are identically zero and never shipped).
+
+Tree layout: {group: {target: {"A": (Lg, [N,] d_in, r_max),
+                                "B": (Lg, [N,] r_max, d_out)}}}
+(leading layer axis to match the model's scanned parameter stacks; client
+axis N present for the per-client copies).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ArchConfig, LoRAConfig
+from repro.models.model import Model
+
+Params = Dict[str, Any]
+
+
+def init_adapters(model: Model, key, *, num_clients: int = 0,
+                  dtype=jnp.float32) -> Params:
+    """A ~ N(0, 1/r), B = 0 (adapter starts as identity) at max rank."""
+    lora = model.arch.lora
+    r = lora.r_others
+    spec = model.adapter_spec()
+    tree: Params = {}
+    for gname, targets in spec.items():
+        lg = model.group_by_name[gname].size
+        tree[gname] = {}
+        for tname, (din, dout) in targets.items():
+            key, k1 = jax.random.split(key)
+            shape_a = (lg, num_clients, din, r) if num_clients \
+                else (lg, din, r)
+            shape_b = (lg, num_clients, r, dout) if num_clients \
+                else (lg, r, dout)
+            a = jax.random.normal(k1, shape_a, dtype) * (1.0 / r) ** 0.5
+            tree[gname][tname] = {"A": a, "B": jnp.zeros(shape_b, dtype)}
+    return tree
+
+
+def effective_ranks(flat_layers: int, cuts, lora: LoRAConfig):
+    """cuts: ([N,] ) int -> ranks ([N,] M).
+
+    Layer m-1 is the client-side cut layer (rank r_cut); with two_side_cut
+    layer m (first server layer) is also reduced (paper Fig 2a)."""
+    layers = jnp.arange(flat_layers)
+    cuts = jnp.asarray(cuts)
+    c = cuts[..., None]                                  # ([N,]1)
+    is_cut = layers == c - 1
+    if lora.two_side_cut:
+        is_cut = is_cut | (layers == c)
+    return jnp.where(is_cut, lora.r_cut, lora.r_others)
+
+
+def rank_masks_for_group(model: Model, gname: str, ranks):
+    """ranks ([N,] M) -> (Lg, [N,] r_max) {0,1} column mask for group."""
+    g = model.group_by_name[gname]
+    ids = jnp.asarray(g.layer_ids)
+    r_max = model.arch.lora.r_others
+    sub = jnp.take(ranks, ids, axis=-1)                  # ([N,] Lg)
+    sub = jnp.moveaxis(sub, -1, 0)                       # (Lg, [N])
+    iota = jnp.arange(r_max)
+    return (iota < sub[..., None]).astype(jnp.float32)   # (Lg,[N],r)
+
+
+def scales_for_group(model: Model, gname: str, ranks):
+    """LoRA scaling alpha/r_eff per (layer[, client]) -> (Lg, [N])."""
+    g = model.group_by_name[gname]
+    ids = jnp.asarray(g.layer_ids)
+    sub = jnp.take(ranks, ids, axis=-1)
+    sub = jnp.moveaxis(sub, -1, 0).astype(jnp.float32)
+    return model.arch.lora.alpha / jnp.maximum(sub, 1.0)
+
+
+def mask_adapters(model: Model, adapters: Params, ranks) -> Params:
+    """Attach rank masks + scales: produces the apply-ready tree
+    {group:{target:{"A" masked, "B" masked, "scale"}}}."""
+    out: Params = {}
+    for gname, targets in adapters.items():
+        cmask = rank_masks_for_group(model, gname, ranks)   # (Lg,[N],r)
+        scale = scales_for_group(model, gname, ranks)       # (Lg,[N])
+        out[gname] = {}
+        for tname, ad in targets.items():
+            a_mask = cmask[..., None, :]                    # (Lg,[N],1,r)
+            b_mask = cmask[..., :, None]                    # (Lg,[N],r,1)
+            out[gname][tname] = {
+                "A": ad["A"] * a_mask.astype(ad["A"].dtype),
+                "B": ad["B"] * b_mask.astype(ad["B"].dtype),
+                "scale": scale,
+            }
+    return out
+
+
+def adapter_param_count(model: Model, ranks) -> Any:
+    """Effective trainable-parameter count given the rank assignment."""
+    spec = model.adapter_spec()
+    total = 0
+    for gname, targets in spec.items():
+        g = model.group_by_name[gname]
+        ids = jnp.asarray(g.layer_ids)
+        r = jnp.take(ranks, ids, axis=-1)                   # ([N,] Lg)
+        per_rank = sum(din + dout for din, dout in targets.values())
+        total = total + jnp.sum(r * per_rank, axis=-1)
+    return total

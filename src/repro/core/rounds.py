@@ -1,0 +1,214 @@
+"""The SplitFT round engine — Algorithm 1 as one jitted SPMD step.
+
+One `train_step` call = one global round (f1-f5 + b1-b4):
+
+  f1/f2  client-side forward to the cut      } a single end-to-end
+  f3     server fwd/bwd on smashed data      } jax.value_and_grad over
+  f4/f5  gradient return + client backward   } (client_adps, server_adps):
+                                               the cut boundary is the
+                                               mask switch in the merged
+                                               adapter tree, so AD routes
+                                               exactly the paper's
+                                               gradients to each side
+  b1-b3  FedAvg of client adapters (weighted, masked, survivor-aware,
+         optionally top-k+EF or int8 compressed)
+  b4     dormant rows re-synced to the server adapters
+
+Heterogeneous per-client cuts, rank policy, adaptive movement and elastic
+membership are all *data* (mask arrays) — one executable covers every
+configuration (DESIGN.md §3).
+
+Base parameters stay frozen (LoRA fine-tuning): they are an input, never
+an output, so the optimizer holds state only for adapters.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.core import aggregation, lora as lora_lib, split
+from repro.models.common import NO_SHARDING, ShardingPolicy
+from repro.models.model import Model
+from repro.optim import ErrorFeedback, int8_dequantize, int8_quantize, \
+    make_optimizer
+
+Params = Dict[str, Any]
+
+
+def init_state(model: Model, key, *, num_clients: int,
+               dtype=jnp.float32) -> Params:
+    """Round-engine state (everything that changes across rounds)."""
+    arch = model.arch
+    kc, ks = jax.random.split(key)
+    cad = lora_lib.init_adapters(model, kc, num_clients=num_clients,
+                                 dtype=dtype)
+    sad = lora_lib.init_adapters(model, ks, num_clients=0, dtype=dtype)
+    opt = _optimizer_of(arch)
+    state: Params = {
+        "client_adapters": cad,
+        "server_adapters": sad,
+        "opt_c": opt.init(cad),
+        "opt_s": opt.init(sad),
+        "cuts": jnp.full((num_clients,), arch.split.cut_layer, jnp.int32),
+        "round": jnp.zeros((), jnp.int32),
+    }
+    return state
+
+
+def _optimizer_of(arch: ArchConfig):
+    t = arch.train
+    return make_optimizer(t.optimizer, weight_decay=t.weight_decay,
+                          beta1=t.beta1, beta2=t.beta2, eps=t.eps,
+                          grad_clip=t.grad_clip)
+
+
+def make_train_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
+                    remat: str = "none", ce_chunk: int = 0,
+                    agg_every: int = 1, compress: str = "none",
+                    topk_frac: float = 0.05, microbatch: int = 1,
+                    jit: bool = True):
+    """Build the jitted round step.
+
+    step(base_params, state, batch, weights, active, lr_c, lr_s)
+      -> (state', metrics)
+
+    weights: (N,) combined FedAvg x C3 weights (w_i * |D_i|/|D|);
+    active:  (N,) {0,1} survivor mask (straggler deadline / elastic).
+
+    microbatch=A > 1 accumulates gradients over A slices of the per-client
+    batch before the optimizer step — activation memory scales 1/A while
+    the gradient buffer stays adapter-sized (LoRA's key memory property)."""
+    arch = model.arch
+    opt = _optimizer_of(arch)
+
+    def step(base_params, state, batch, weights, active, lr_c, lr_s):
+        cad, sad = state["client_adapters"], state["server_adapters"]
+        cuts = state["cuts"]
+        wl = weights * active
+        wl = wl / jnp.maximum(jnp.sum(wl), 1e-9)
+
+        def loss_fn(cad_, sad_, mb):
+            eff = split.merge_adapters(model, cad_, sad_, cuts)
+            per_loss, metrics = model.loss(
+                base_params, eff, mb, policy=policy, remat=remat,
+                ce_chunk=ce_chunk, per_client=True)
+            total = jnp.sum(wl * per_loss)
+            return total, metrics
+
+        grad_fn = jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)
+
+        if microbatch > 1:
+            def split_mb(t):
+                n, b = t.shape[0], t.shape[1]
+                t = t.reshape((n, microbatch, b // microbatch)
+                              + t.shape[2:])
+                return jnp.moveaxis(t, 1, 0)      # (A, N, B/A, ...)
+
+            mbs = jax.tree.map(split_mb, batch)
+
+            def mb_body(carry, mb):
+                g_c, g_s, tot, met = carry
+                (t, m), (gc, gs) = grad_fn(cad, sad, mb)
+                g_c = jax.tree.map(jnp.add, g_c, gc)
+                g_s = jax.tree.map(jnp.add, g_s, gs)
+                met = jax.tree.map(jnp.add, met, m)
+                return (g_c, g_s, tot + t, met), None
+
+            zeros_like_f32 = lambda tr: jax.tree.map(
+                lambda x: jnp.zeros(x.shape, x.dtype), tr)
+            met0 = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, x.dtype),
+                jax.eval_shape(lambda: loss_fn(cad, sad, jax.tree.map(
+                    lambda t: t[0], mbs))[1]))
+            (g_cad, g_sad, total, metrics), _ = jax.lax.scan(
+                mb_body,
+                (zeros_like_f32(cad), zeros_like_f32(sad),
+                 jnp.float32(0.0), met0),
+                mbs)
+            scale = 1.0 / microbatch
+            g_cad = jax.tree.map(lambda g: g * scale, g_cad)
+            g_sad = jax.tree.map(lambda g: g * scale, g_sad)
+            total = total * scale
+            metrics = jax.tree.map(lambda m: m * scale, metrics)
+        else:
+            (total, metrics), (g_cad, g_sad) = grad_fn(cad, sad, batch)
+
+        new_cad, opt_c = opt.update(g_cad, state["opt_c"], cad, lr_c)
+        new_sad, opt_s = opt.update(g_sad, state["opt_s"], sad, lr_s)
+
+        # -- b1-b3: aggregate client adapters -------------------------------
+        def do_agg(operand):
+            cad_in, ef_in = operand
+            cad_for_agg = cad_in
+            ef_out = ef_in
+            if compress == "topk":
+                delta = aggregation.adapter_delta(cad_in, cad)
+                dense, ef_out, _ = ErrorFeedback.apply(delta, ef_in,
+                                                       topk_frac)
+                cad_for_agg = aggregation.apply_delta(cad, dense)
+            elif compress == "int8":
+                delta = aggregation.adapter_delta(cad_in, cad)
+                deq = int8_dequantize(int8_quantize(delta))
+                deq = jax.tree.map(lambda d, ref: d.astype(ref.dtype),
+                                   deq, delta)
+                cad_for_agg = aggregation.apply_delta(cad, deq)
+            agg = aggregation.fedavg(model, cad_for_agg, cuts, weights,
+                                     active)
+            out = aggregation.broadcast_after_agg(model, cad_for_agg, agg,
+                                                  new_sad, cuts)
+            return out, ef_out
+
+        def no_agg(operand):
+            return operand
+
+        ef = state.get("ef")
+        if agg_every <= 1:
+            new_cad, ef = do_agg((new_cad, ef))
+        else:
+            new_cad, ef = jax.lax.cond(
+                (state["round"] + 1) % agg_every == 0,
+                do_agg, no_agg, (new_cad, ef))
+
+        new_state = dict(state)
+        new_state.update(client_adapters=new_cad, server_adapters=new_sad,
+                         opt_c=opt_c, opt_s=opt_s,
+                         round=state["round"] + 1)
+        if ef is not None:
+            new_state["ef"] = ef
+        metrics = dict(metrics)
+        metrics["total"] = total
+        return new_state, metrics
+
+    if jit:
+        return jax.jit(step, donate_argnums=(1,))
+    return step
+
+
+def make_eval_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
+                   ce_chunk: int = 0, jit: bool = True):
+    """Evaluate the GLOBAL model (paper b4) on per-client eval batches.
+
+    Returns per-client (loss, accuracy) — the inputs to the C3 rule."""
+
+    def step(base_params, state, batch, weights):
+        eff = split.serve_adapters(model, state["client_adapters"],
+                                   state["server_adapters"], state["cuts"],
+                                   weights)
+        per_loss, metrics = model.loss(base_params, eff, batch,
+                                       policy=policy, ce_chunk=ce_chunk,
+                                       per_client=True)
+        return per_loss, metrics
+
+    return jax.jit(step) if jit else step
+
+
+def with_error_feedback(state: Params) -> Params:
+    """Attach zeroed EF residuals (needed before compress='topk')."""
+    state = dict(state)
+    state["ef"] = ErrorFeedback.init(state["client_adapters"])
+    return state

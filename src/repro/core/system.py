@@ -1,0 +1,251 @@
+"""SplitFTSystem — host-side orchestration of the full paper workflow.
+
+Owns: corpus -> tokenize -> partition (C4) -> per-client loaders ->
+round loop (train step, straggler deadline, eval, C3 adjustment,
+aggregation weights, checkpoint/resume, elastic membership).
+
+Everything device-side lives in rounds.py; this class only moves numpy
+batches in and metrics out, so it works identically on CPU (paper-scale
+experiments) and on a mesh (dry-run / production).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.config import ArchConfig
+from repro.core import adaptive, comm, rounds
+from repro.core.split import serve_adapters
+from repro.data import (ClientDataLoader, make_client_loaders,
+                        partition_dataset, synthetic_corpus)
+from repro.data.pipeline import stack_client_batches
+from repro.data.tokenizer import HashTokenizer
+from repro.models.common import NO_SHARDING
+from repro.models.model import Model, build_model
+from repro.runtime.elastic import ClientPool
+from repro.runtime.straggler import SpeedModel, deadline_survivors
+
+
+@dataclasses.dataclass
+class SystemConfig:
+    num_samples: int = 2000
+    eval_samples: int = 256
+    adjust_every: int = 1          # C3 cadence (rounds)
+    agg_every: int = 1             # FedAvg cadence (rounds)
+    compress: str = "none"         # none | topk | int8
+    topk_frac: float = 0.05
+    straggler_sim: bool = False
+    deadline_frac: float = 1.5
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0
+    keep_checkpoints: int = 3
+    adaptive: Optional[bool] = None   # None -> arch.split.adaptive
+
+
+class SplitFTSystem:
+    def __init__(self, arch: ArchConfig, sys_cfg: SystemConfig = None, *,
+                 policy=NO_SHARDING, seed: int = 0, jit: bool = True):
+        self.arch = arch
+        self.sys = sys_cfg or SystemConfig()
+        self.model = build_model(arch)
+        self.policy = policy
+        self.seed = seed
+        n = arch.data.num_clients
+        self.pool = ClientPool(n)
+
+        # ---- data (C4) ----
+        tok = HashTokenizer(arch.model.vocab_size)
+        texts = synthetic_corpus(self.sys.num_samples, seed=arch.data.seed)
+        self.samples = [np.asarray(tok.encode(t), np.int32) for t in texts]
+        lengths = [len(s) for s in self.samples]
+        parts = partition_dataset(
+            lengths, n, strategy=arch.data.partition,
+            alpha=arch.data.alpha, num_classes=arch.data.num_length_classes,
+            seed=arch.data.seed)
+        self.parts = parts
+        self.loaders = make_client_loaders(
+            self.samples, parts, batch_size=arch.train.batch_size,
+            seq_len=arch.train.seq_len, seed=seed)
+        eval_texts = synthetic_corpus(self.sys.eval_samples,
+                                      seed=arch.data.seed + 777)
+        eval_tokens = [np.asarray(tok.encode(t), np.int32)
+                       for t in eval_texts]
+        self.eval_loaders = make_client_loaders(
+            [t for t in eval_tokens], [np.arange(len(eval_tokens))] * n,
+            batch_size=arch.train.batch_size, seq_len=arch.train.seq_len,
+            seed=seed + 999)
+
+        # ---- model/state ----
+        key = jax.random.PRNGKey(seed)
+        k_base, k_state = jax.random.split(key)
+        self.base_params = self.model.init_params(k_base)
+        self.state = rounds.init_state(self.model, k_state, num_clients=n)
+        if self.sys.compress == "topk":
+            self.state = rounds.with_error_feedback(self.state)
+        self.train_step = rounds.make_train_step(
+            self.model, policy=policy, remat=arch.train.remat,
+            agg_every=self.sys.agg_every, compress=self.sys.compress,
+            topk_frac=self.sys.topk_frac, jit=jit)
+        self.eval_step = rounds.make_eval_step(self.model, policy=policy,
+                                               jit=jit)
+
+        # ---- C3 state ----
+        self.c3_weights = np.ones(n)
+        self.sample_counts = np.array([l.num_samples()
+                                       for l in self.loaders], float)
+        self.speed = SpeedModel(n, seed=seed) if self.sys.straggler_sim \
+            else None
+        self.ckpt = (CheckpointManager(self.sys.checkpoint_dir,
+                                       keep=self.sys.keep_checkpoints)
+                     if self.sys.checkpoint_dir else None)
+        self.history: List[Dict[str, Any]] = []
+        self._adaptive = (arch.split.adaptive if self.sys.adaptive is None
+                          else self.sys.adaptive)
+
+    # ------------------------------------------------------------------
+    def combined_weights(self) -> np.ndarray:
+        """FedAvg weight |D_i|/|D| x C3 weight w_i (paper formula 2)."""
+        p = self.pool.weights(self.sample_counts)
+        w = p * self.c3_weights
+        s = w.sum()
+        return w / s if s > 0 else w
+
+    def _train_batch(self, r: int):
+        return stack_client_batches([l.batch(r) for l in self.loaders])
+
+    def _eval_batch(self, r: int):
+        return stack_client_batches([l.batch(r) for l in self.eval_loaders])
+
+    # ------------------------------------------------------------------
+    def run(self, num_rounds: int, *, log_every: int = 10,
+            callback: Optional[Callable] = None) -> List[Dict[str, Any]]:
+        arch = self.arch
+        n = self.pool.max_clients
+        lr_c = jnp.float32(arch.train.lr_client)
+        lr_s = jnp.float32(arch.train.lr_server)
+        start = int(self.state["round"])
+        for r in range(start, start + num_rounds):
+            batch = self._train_batch(r)
+            weights = jnp.asarray(self.combined_weights(), jnp.float32)
+
+            # straggler deadline -> survivor mask for THIS round
+            active = self.pool.active.astype(np.float64)
+            times = None
+            if self.speed is not None:
+                cuts_np = np.asarray(self.state["cuts"])
+                cb = comm.round_comm_bytes(
+                    self.model, cuts=cuts_np,
+                    batch_size=arch.train.batch_size,
+                    seq_len=arch.train.seq_len)
+                flops_layer = 12 * arch.model.d_model ** 2 \
+                    * arch.train.batch_size * arch.train.seq_len
+                times = self.speed.round_times(
+                    cuts=cuts_np, flops_per_layer=flops_layer,
+                    smashed_bytes=float(cb["smashed_up"][0]),
+                    adapter_bytes=cb["adapter_up"], round_idx=r)
+                surv, _ = deadline_survivors(
+                    times, deadline_frac=self.sys.deadline_frac)
+                active = active * surv
+            active_j = jnp.asarray(active, jnp.float32)
+
+            self.state, metrics = self.train_step(
+                self.base_params, self.state, batch, weights, active_j,
+                lr_c, lr_s)
+
+            rec: Dict[str, Any] = {
+                "round": r,
+                "loss": float(metrics["total"]),
+                "ce": np.asarray(metrics["ce"]),
+                "accuracy": np.asarray(metrics["accuracy"]),
+                "cuts": np.asarray(self.state["cuts"]).copy(),
+                "active": active.copy(),
+            }
+            if times is not None:
+                rec["round_time_sim"] = times
+            rec["comm"] = comm.round_comm_bytes(
+                self.model, cuts=np.asarray(self.state["cuts"]),
+                batch_size=arch.train.batch_size,
+                seq_len=arch.train.seq_len)["total"]
+
+            # C3: evaluate global model per client, adjust cuts + weights
+            if self._adaptive and (r + 1) % self.sys.adjust_every == 0:
+                e_loss, e_metrics = self.eval_step(
+                    self.base_params, self.state, self._eval_batch(r),
+                    weights)
+                accs = np.asarray(e_metrics["accuracy"])
+                rec["eval_ce"] = np.asarray(e_metrics["ce"])
+                rec["eval_accuracy"] = accs
+                self.c3_weights = adaptive.update_weights(
+                    accs, arch.split.gamma)
+                new_cuts = adaptive.adjust_cuts(
+                    np.asarray(self.state["cuts"]), accs, arch.split,
+                    self.model.num_flat_layers, round_times=times)
+                self.state["cuts"] = jnp.asarray(new_cuts, jnp.int32)
+                rec["weights"] = self.c3_weights.copy()
+
+            self.history.append(rec)
+            if callback:
+                callback(rec)
+            if self.ckpt and self.sys.checkpoint_every and \
+                    (r + 1) % self.sys.checkpoint_every == 0:
+                self.save(r + 1)
+            if log_every and (r + 1) % log_every == 0:
+                print(f"[round {r + 1}] loss={rec['loss']:.4f} "
+                      f"acc={rec['accuracy'].mean():.4f} "
+                      f"cuts={rec['cuts'].tolist()}")
+        return self.history
+
+    # ------------------------------------------------------------------
+    def evaluate(self, *, num_batches: int = 4) -> Dict[str, float]:
+        """Global-model perplexity/accuracy on held-out data."""
+        weights = jnp.asarray(self.combined_weights(), jnp.float32)
+        ces, accs = [], []
+        for b in range(num_batches):
+            loss, metrics = self.eval_step(
+                self.base_params, self.state, self._eval_batch(10_000 + b),
+                weights)
+            ces.append(np.asarray(metrics["ce"]).mean())
+            accs.append(np.asarray(metrics["accuracy"]).mean())
+        ce = float(np.mean(ces))
+        return {"ce": ce, "perplexity": float(np.exp(ce)),
+                "accuracy": float(np.mean(accs))}
+
+    # ------------------------------------------------------------------
+    def save(self, step: int):
+        assert self.ckpt is not None
+        meta = {
+            "round": int(self.state["round"]),
+            "c3_weights": self.c3_weights.tolist(),
+            "active": self.pool.active.tolist(),
+            "seed": self.seed,
+        }
+        self.ckpt.save(step, self.state, metadata=meta)
+
+    def restore(self) -> bool:
+        assert self.ckpt is not None
+        got = self.ckpt.restore_latest(self.state)
+        if got is None:
+            return False
+        tree, meta, step = got
+        self.state = jax.tree.map(jnp.asarray, tree)
+        self.c3_weights = np.asarray(meta.get("c3_weights",
+                                              self.c3_weights))
+        if "active" in meta:
+            self.pool.active = np.asarray(meta["active"], bool)
+        return True
+
+    # ------------------------------------------------------------------
+    def serve_model(self):
+        """(base_params, global adapters) for the serving path."""
+        weights = jnp.asarray(self.combined_weights(), jnp.float32)
+        eff = serve_adapters(self.model, self.state["client_adapters"],
+                             self.state["server_adapters"],
+                             self.state["cuts"], weights)
+        return self.base_params, eff

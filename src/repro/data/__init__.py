@@ -1,0 +1,6 @@
+from repro.data.corpus import synthetic_corpus  # noqa: F401
+from repro.data.partition import (  # noqa: F401
+    iid_partition, length_dirichlet_partition, partition_dataset,
+)
+from repro.data.pipeline import ClientDataLoader, make_client_loaders  # noqa: F401
+from repro.data.tokenizer import ByteTokenizer, HashTokenizer  # noqa: F401

@@ -1,0 +1,62 @@
+"""Tokenizers.
+
+ByteTokenizer — reversible byte-level vocab (256 bytes + specials); used
+for real text at paper scale.
+
+HashTokenizer — deterministic word-level hashing into an arbitrary vocab
+size; used to exercise the assigned architectures' exact vocab sizes
+(50k..202k) without shipping tokenizer assets.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+
+class ByteTokenizer:
+    PAD, BOS, EOS = 0, 1, 2
+    SPECIALS = 3
+
+    def __init__(self):
+        self.vocab_size = 256 + self.SPECIALS
+
+    def encode(self, text: str, *, bos: bool = True,
+               eos: bool = True) -> List[int]:
+        ids = [b + self.SPECIALS for b in text.encode("utf-8",
+                                                      errors="replace")]
+        if bos:
+            ids = [self.BOS] + ids
+        if eos:
+            ids = ids + [self.EOS]
+        return ids
+
+    def decode(self, ids: Sequence[int]) -> str:
+        body = bytes(i - self.SPECIALS for i in ids
+                     if i >= self.SPECIALS)
+        return body.decode("utf-8", errors="replace")
+
+
+class HashTokenizer:
+    PAD, BOS, EOS = 0, 1, 2
+    SPECIALS = 3
+
+    def __init__(self, vocab_size: int):
+        self.vocab_size = vocab_size
+
+    def _hash(self, word: str) -> int:
+        h = 2166136261
+        for ch in word.encode("utf-8"):
+            h = ((h ^ ch) * 16777619) & 0xFFFFFFFF
+        return self.SPECIALS + h % (self.vocab_size - self.SPECIALS)
+
+    def encode(self, text: str, *, bos: bool = True,
+               eos: bool = True) -> List[int]:
+        ids = [self._hash(w) for w in text.split()]
+        if bos:
+            ids = [self.BOS] + ids
+        if eos:
+            ids = ids + [self.EOS]
+        return ids
+
+    def decode(self, ids: Sequence[int]) -> str:  # lossy by construction
+        return " ".join(f"<{i}>" for i in ids if i >= self.SPECIALS)

@@ -1,0 +1,77 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache.
+
+q: (B, H, hd) — one new token per sequence.
+k/v: (B, S_max, KVH, hd) — the cache; positions >= cache_len are garbage
+and must not contribute.  cache_len: (B,) int32.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention(q, k, v, cache_len, *, scale: Optional[float] = None,
+                     window: int = 0):
+    b, h, hd = q.shape
+    _, s, kvh, _ = k.shape
+    group = h // kvh
+    if scale is None:
+        scale = hd ** -0.5
+
+    qg = (q.astype(jnp.float32) * scale).astype(q.dtype) \
+        .reshape(b, kvh, group, hd)
+
+    block = 8192
+    if s > block and s % block == 0:
+        # blocked online-softmax (mirrors the flash-decode kernel): only
+        # one KV block is ever up-cast / re-laid-out at a time — a direct
+        # dot over a 500k cache would materialize the full cache in f32.
+        nblk = s // block
+        # blocks as scan xs: the (nblk, block) split of a seq-sharded
+        # cache keeps each scan step's slice local to its shard (an
+        # in-loop dynamic_slice at a traced offset would force an
+        # all-gather of the whole cache instead)
+        kb = jnp.moveaxis(k.reshape(b, nblk, block, kvh, hd), 1, 0)
+        vb = jnp.moveaxis(v.reshape(b, nblk, block, kvh, hd), 1, 0)
+
+        def body(carry, inp):
+            m_run, l_run, acc = carry
+            idx, kc, vc = inp                        # kc (B,blk,KVH,hd)
+            sc = jnp.einsum("bgkd,bsgd->bgks", qg, kc,
+                            preferred_element_type=jnp.float32)
+            pos = idx * block + jnp.arange(block)[None, :]
+            valid = pos < cache_len[:, None]
+            if window > 0:
+                valid &= pos >= (cache_len[:, None] - window)
+            sc = jnp.where(valid[:, None, None, :], sc, -1e30)
+            m_new = jnp.maximum(m_run, jnp.max(sc, -1))
+            p = jnp.exp(sc - m_new[..., None])
+            alpha = jnp.exp(m_run - m_new)
+            l_new = l_run * alpha + jnp.sum(p, -1)
+            upd = jnp.einsum("bgks,bsgd->bgkd", p.astype(vc.dtype), vc,
+                             preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc * alpha[..., None] + upd), None
+
+        m0 = jnp.full((b, kvh, group), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, kvh, group), jnp.float32)
+        a0 = jnp.zeros((b, kvh, group, hd), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                          (jnp.arange(nblk), kb, vb))
+        l_f = jnp.where(l_f == 0.0, 1.0, l_f)
+        out = acc / l_f[..., None]
+        return out.reshape(b, h, hd).astype(q.dtype)
+
+    scores = jnp.einsum("bgkd,bsgd->bgks", qg, k,
+                        preferred_element_type=jnp.float32)   # (B,G,grp,S)
+    pos = jnp.arange(s)[None, :]                              # (1,S)
+    valid = pos < cache_len[:, None]
+    if window > 0:
+        valid &= pos >= (cache_len[:, None] - window)
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgks,bsgd->bgkd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, hd).astype(q.dtype)

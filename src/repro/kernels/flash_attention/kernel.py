@@ -1,0 +1,144 @@
+"""Flash attention Pallas TPU kernel (causal, GQA, sliding window).
+
+Design (DESIGN.md §4): blocked online-softmax over KV tiles.
+
+  grid = (B * H, S_q / bq, S_k / bk), KV innermost ("arbitrary").
+  Q tile (bq, hd) stays in VMEM for the whole KV loop; running max m,
+  normalizer l and the un-normalized output accumulator live in fp32
+  scratch.  K/V tiles are (bk, hd).  GQA is handled in the index_map:
+  the (b*h) grid coordinate maps K/V to head h // group_size, so KV heads
+  are never materialized per Q head in HBM.
+
+  Causal skip: KV tiles strictly above the diagonal are skipped via
+  pl.when on the whole tile body (Mosaic executes the grid sequentially
+  per core, so the skip saves real time on TPU).
+
+Block sizes: bq/bk default 512/512 for long-context prefill — head_dim
+(64..128) keeps tiles at 512*128*4B = 256 KiB, well under VMEM with
+double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+DEFAULT_BQ = 512
+DEFAULT_BK = 512
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale: float, causal: bool, window: int,
+            bq: int, bk: int, n_kv: int, q_offset: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * bq + q_offset
+    k_start = ik * bk
+
+    # tile-level skip: entire KV tile in the causal future
+    run = jnp.bool_(True)
+    if causal:
+        run = q_start + bq - 1 >= k_start
+    if window > 0:
+        # entire KV tile left of every query's window
+        run = jnp.logical_and(run, k_start + bk - 1 > q_start - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale
+        k = k_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window > 0:
+            mask &= q_pos - k_pos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p.astype(v_ref.dtype), v_ref[0, 0],
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)   # fully-masked rows -> zero output
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "bq", "bk", "q_offset",
+                     "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           scale: float | None = None, q_offset: int = 0,
+                           bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                           interpret: bool = False):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, KVH, hd) -> (B, Sq, H, hd)."""
+    b, sq, h, hd = q.shape
+    _, sk, kvh, _ = k.shape
+    group = h // kvh
+    if scale is None:
+        scale = hd ** -0.5
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    if sq % bq or sk % bk:
+        raise ValueError(f"seq ({sq},{sk}) not divisible by ({bq},{bk})")
+    n_kv = sk // bk
+
+    # layout: (B*H, S, hd) for Q/O; K/V stay (B, KVH, S, hd), GQA via index_map
+    qt = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (b * h, sq // bq, n_kv)
+
+    def kv_index(bh, iq, ik):
+        return (bh // h, (bh % h) // group, ik, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          bq=bq, bk=bk, n_kv=n_kv, q_offset=q_offset),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd), kv_index),
+            pl.BlockSpec((1, 1, bk, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),     # running max
+            pltpu.VMEM((bq, 1), jnp.float32),     # normalizer
+            pltpu.VMEM((bq, hd), jnp.float32),    # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,81 @@
+"""Public wrapper for flash attention.
+
+Dispatch: TPU -> Pallas kernel; REPRO_PALLAS_INTERPRET=1 -> interpret mode;
+otherwise the jnp oracle (which XLA fuses into a perfectly fine CPU path).
+
+The backward is jnp (recomputation-style: scores are rebuilt from q/k —
+flash-style backward as a Pallas kernel is tracked in EXPERIMENTS.md §Perf).
+custom_vjp keeps the oracle and kernel on one differentiation path so the
+round engine never branches on backend.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def _use_pallas() -> bool:
+    if os.environ.get("REPRO_PALLAS_INTERPRET") == "1":
+        return True
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def _block_for(s: int, target: int) -> int:
+    if s >= target:
+        return target
+    return max(1 << max(0, (s - 1).bit_length()), 1)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash(causal: bool, window: int, scale: float, q_offset: int):
+    """Build a custom_vjp attention fn closed over the static config."""
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        interp = os.environ.get("REPRO_PALLAS_INTERPRET") == "1"
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, scale=scale,
+            q_offset=q_offset, bq=_block_for(q.shape[1], 512),
+            bk=_block_for(k.shape[1], 512), interpret=interp)
+
+    def fwd(q, k, v):
+        return attn(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        q, k, v = res
+        def f(q, k, v):
+            return ref.attention(q, k, v, causal=causal, window=window,
+                                 scale=scale, q_offset=q_offset)
+        _, vjp = jax.vjp(f, q, k, v)
+        return vjp(g)
+
+    attn.defvjp(fwd, bwd)
+    return attn
+
+
+CHUNKED_THRESHOLD = 1024    # non-TPU: S_k above this -> chunked online path
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: Optional[float] = None, q_offset: int = 0):
+    """Differentiable attention: (B,Sq,H,hd) x (B,Sk,KVH,hd) -> (B,Sq,H,hd)."""
+    s = float(scale) if scale is not None else q.shape[-1] ** -0.5
+    if not _use_pallas():
+        if k.shape[1] > CHUNKED_THRESHOLD or \
+                os.environ.get("REPRO_ATTN_IMPL") == "chunked":
+            return ref.chunked_attention(q, k, v, causal=causal,
+                                         window=window, scale=s,
+                                         q_offset=q_offset)
+        return ref.attention(q, k, v, causal=causal, window=window,
+                             scale=s, q_offset=q_offset)
+    return _make_flash(bool(causal), int(window), s, int(q_offset))(q, k, v)

@@ -1,0 +1,1 @@
+from repro.kernels.lora_matmul.ops import lora_matmul  # noqa: F401

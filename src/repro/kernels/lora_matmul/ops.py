@@ -1,0 +1,107 @@
+"""jit'd public wrapper for the fused LoRA matmul.
+
+Dispatch policy (shared by all kernels in repro.kernels):
+  * on TPU                      -> Pallas kernel
+  * REPRO_PALLAS_INTERPRET=1    -> Pallas kernel in interpret mode (CPU tests)
+  * otherwise (CPU/GPU)         -> ref.py jnp oracle
+
+The wrapper owns shape management (flattening batch dims, padding to block
+multiples) and the custom VJP.  The backward pass is expressed in jnp —
+XLA fuses it well, and it reuses the forward's residuals; a Pallas backward
+is a recorded possible extension in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lora_matmul import ref
+from repro.kernels.lora_matmul.kernel import lora_matmul_pallas
+
+
+def _use_pallas() -> bool:
+    if os.environ.get("REPRO_PALLAS_INTERPRET") == "1":
+        return True
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET") == "1"
+
+
+def _pad_to(x, mult, axis):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+def _pallas_path(x, w, a, b, scale):
+    """Flatten leading dims, pad every dim to MXU-aligned blocks, call."""
+    *lead, k_dim = x.shape
+    n = w.shape[1]
+    r = a.shape[1]
+    x2 = x.reshape(-1, k_dim)
+    m = x2.shape[0]
+
+    bm = 256 if m >= 256 else max(8, 1 << (m - 1).bit_length())
+    bn = min(256, n) if n % 128 == 0 else n
+    bk = min(512, k_dim) if k_dim % 128 == 0 else k_dim
+
+    x2, m0 = _pad_to(x2, bm, 0)
+    # pad rank to the fp32 sublane multiple so (bk, r)/(r, bn) tiles are legal
+    a_p, _ = _pad_to(a, 8, 1)
+    b_p, _ = _pad_to(b, 8, 0)
+
+    y = lora_matmul_pallas(x2, w, a_p, b_p, scale, bm=bm,
+                           bn=min(bn, n), bk=min(bk, k_dim),
+                           interpret=_interpret())
+    y = y[:m0]
+    return y.reshape(*lead, n)
+
+
+@jax.custom_vjp
+def lora_matmul(x, w, a, b, scale):
+    """y = x @ W + scale * (x @ A) @ B with fused-kernel forward on TPU."""
+    if _use_pallas():
+        return _pallas_path(x, w, a, b, scale)
+    return ref.lora_matmul(x, w, a, b, scale)
+
+
+def _fwd(x, w, a, b, scale):
+    y = lora_matmul(x, w, a, b, scale)
+    return y, (x, w, a, b, scale)
+
+
+def _bwd(res, g):
+    x, w, a, b, scale = res
+    gf = g.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    s = scale.astype(jnp.float32)
+    # dx = g W^T + s (g B^T) A^T
+    gb = jnp.einsum("...n,rn->...r", gf, b.astype(jnp.float32))
+    dx = (jnp.einsum("...n,kn->...k", gf, w.astype(jnp.float32))
+          + s * jnp.einsum("...r,kr->...k", gb, a.astype(jnp.float32)))
+    # dW = x^T g   (frozen base: still returned; caller masks if lora_only)
+    dw = jnp.einsum("...k,...n->kn", xf, gf)
+    # dA = s x^T (g B^T);  dB = s (x A)^T g
+    da = s * jnp.einsum("...k,...r->kr", xf, gb)
+    xa = jnp.einsum("...k,kr->...r", xf, a.astype(jnp.float32))
+    db = s * jnp.einsum("...r,...n->rn", xa, gf)
+    dscale = jnp.sum(jnp.einsum("...r,rn->...n", xa, b.astype(jnp.float32))
+                     * gf).astype(scale.dtype)
+    return (dx.astype(x.dtype), dw.astype(w.dtype), da.astype(a.dtype),
+            db.astype(b.dtype), dscale)
+
+
+lora_matmul.defvjp(_fwd, _bwd)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused LoRA matmul.
+
+y = x @ W + scale * (x @ A) @ B
+
+This is the semantics contract for the Pallas kernel; it is also the
+execution path on CPU (tests, paper-scale experiments) and under the
+dry-run lowering.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lora_matmul(x, w, a, b, scale):
+    """x: (..., K); w: (K, N); a: (K, r); b: (r, N); scale: scalar."""
+    base = jnp.einsum("...k,kn->...n", x, w)
+    xa = jnp.einsum("...k,kr->...r", x, a)
+    delta = jnp.einsum("...r,rn->...n", xa, b)
+    return base + scale.astype(base.dtype) * delta

@@ -1,0 +1,253 @@
+"""Cell builders: (architecture x shape x mesh) -> lowered-ready callables.
+
+A *cell* is one entry of the assigned matrix.  Train cells lower the full
+SplitFT round step (forward/backward through the masked split + optimizer
++ FedAvg); prefill/decode cells lower the serving step of the fine-tuned
+global model.  Everything is abstract (ShapeDtypeStruct) — no allocation.
+
+Dry-run conventions:
+  * base parameters in bf16 (the roofline's 197 TFLOP/s is bf16);
+    adapters + optimizer state in f32 (they are small and precision-
+    critical);
+  * 16 federated clients on the `data` axis for train cells;
+  * remat="dots" and chunked CE for train cells (32k-class activations
+    cannot be held otherwise);
+  * serve cells run the global (aggregated) adapters at rank r_others.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ArchConfig, ShapeConfig
+from repro.core import lora as lora_lib, rounds, split
+from repro.models.common import ShardingPolicy
+from repro.models.model import Model, build_model
+from repro.runtime import sharding as shard_rules
+
+DRYRUN_CLIENTS = 16
+PARAM_DTYPE = jnp.bfloat16
+
+
+class Cell(NamedTuple):
+    fn: Any                      # callable to jit
+    args: Tuple                  # abstract args (ShapeDtypeStructs)
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    model: Model
+    info: Dict[str, Any]
+
+
+def _policy(mesh, *, client_mode: bool,
+            seq_shard: bool = False) -> ShardingPolicy:
+    return ShardingPolicy(mesh=mesh, client_mode=client_mode,
+                          seq_shard=seq_shard)
+
+
+def _replicate(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def tune_arch_for_cell(arch: ArchConfig, shape: ShapeConfig,
+                       *, num_clients: int = DRYRUN_CLIENTS) -> ArchConfig:
+    train = dataclasses.replace(
+        arch.train,
+        batch_size=max(shape.global_batch // num_clients, 1),
+        seq_len=shape.seq_len,
+        remat="dots",
+        dtype="bfloat16", param_dtype="bfloat16")
+    data = dataclasses.replace(arch.data, num_clients=num_clients)
+    return arch.replace(train=train, data=data)
+
+
+# ---------------------------------------------------------------------------
+# Train cell: the SplitFT round step
+
+
+def _auto_microbatch(arch: ArchConfig, shape: ShapeConfig, mesh,
+                     num_clients: int, *, seq_shard: bool,
+                     budget: float = 11e9) -> int:
+    """Pick the gradient-accumulation factor so activations fit HBM.
+
+    Empirical activation model (calibrated on the llama3-8b dry-run):
+    bytes/device ~ tokens_per_device * d_model * 2 * (2.2 * L + 20);
+    sequence parallelism divides the per-device token count by the TP
+    axis size."""
+    m = arch.model
+    data_shards = mesh.shape.get("data", 1)
+    pod_shards = mesh.shape.get("pod", 1)
+    per_client_b = max(shape.global_batch // num_clients, 1)
+    n_shard = max(num_clients // data_shards, 1)
+    b_shard = max(per_client_b // pod_shards, 1)
+    tokens_pd = n_shard * b_shard * shape.seq_len
+    if seq_shard:
+        tokens_pd /= mesh.shape.get("model", 1)
+    layers = m.num_layers + m.num_encoder_layers
+    est = tokens_pd * m.d_model * 2 * (2.2 * layers + 20)
+    if m.num_experts:
+        # MoE inflates activation volume by ~top_k (each token occupies
+        # top_k expert slots, x1.25 capacity padding)
+        est *= 1 + 0.6 * m.moe_top_k
+    need = max(int(est // budget) + 1, 1)
+    # round up to a divisor of the per-client batch
+    a = need
+    while per_client_b % a and a < per_client_b:
+        a += 1
+    return min(a, per_client_b)
+
+
+def build_train_cell(arch: ArchConfig, shape: ShapeConfig, mesh,
+                     *, num_clients: int = DRYRUN_CLIENTS,
+                     remat: str = "full", ce_chunk: int = 512,
+                     unroll: bool = False, seq_shard: bool = None,
+                     microbatch: int = 0) -> Cell:
+    if seq_shard is None:
+        # §Perf P11: sequence parallelism is a large win for attention
+        # stacks but a 40-50x collective REGRESSION for SSM/hybrid — the
+        # SSD scan needs the contiguous sequence, so every layer pays a
+        # full-activation all-gather while saving almost nothing.
+        seq_shard = arch.model.family not in ("ssm", "hybrid")
+    if microbatch <= 0:
+        microbatch = _auto_microbatch(arch, shape, mesh, num_clients,
+                                      seq_shard=seq_shard)
+    arch = tune_arch_for_cell(arch, shape, num_clients=num_clients)
+    model = build_model(arch, unroll=unroll)
+    policy = _policy(mesh, client_mode=True, seq_shard=seq_shard)
+    n = num_clients
+
+    key = jax.random.PRNGKey(0)
+    base_abs = jax.eval_shape(
+        functools.partial(model.init_params, dtype=PARAM_DTYPE), key)
+    state_abs = jax.eval_shape(
+        functools.partial(rounds.init_state, model, num_clients=n), key)
+    batch_abs = model.input_specs(shape, num_clients=n, dtype=PARAM_DTYPE)
+    w_abs = jax.ShapeDtypeStruct((n,), jnp.float32)
+    lr_abs = jax.ShapeDtypeStruct((), jnp.float32)
+
+    step = rounds.make_train_step(model, policy=policy, remat=remat,
+                                  ce_chunk=ce_chunk, microbatch=microbatch,
+                                  jit=False)
+
+    base_specs = shard_rules.param_specs(base_abs, mesh)
+    state_specs = _state_specs(state_abs, mesh)
+    batch_specs = shard_rules.batch_specs(batch_abs, mesh, client_dim=True)
+
+    to_shardings = lambda specs: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+    in_sh = (to_shardings(base_specs), to_shardings(state_specs),
+             to_shardings(batch_specs), NamedSharding(mesh, P()),
+             NamedSharding(mesh, P()), NamedSharding(mesh, P()),
+             NamedSharding(mesh, P()))
+    out_sh = (to_shardings(state_specs), None)
+
+    args = (base_abs, state_abs, batch_abs, w_abs, w_abs, lr_abs, lr_abs)
+    return Cell(step, args, in_sh, out_sh, donate_argnums=(1,),
+                model=model,
+                info={"kind": "train", "num_clients": n,
+                      "per_client_batch": arch.train.batch_size,
+                      "microbatch": microbatch})
+
+
+def _state_specs(state_abs, mesh):
+    """Client-stacked trees shard N over the data axis; the rest is small
+    and replicated."""
+    import numpy as np
+
+    def client_rule(leaf):
+        nd = np.ndim(leaf)
+        if nd >= 3:
+            return shard_rules.fit_spec(
+                np.shape(leaf),
+                (None, shard_rules.CLIENT_AXIS) + (None,) * (nd - 2), mesh)
+        return P(*(None,) * nd)
+
+    def repl(leaf):
+        return P(*(None,) * np.ndim(leaf))
+
+    specs = {}
+    for k, v in state_abs.items():
+        if k in ("client_adapters", "ef") or k == "opt_c":
+            specs[k] = jax.tree.map(client_rule, v)
+        else:
+            specs[k] = jax.tree.map(repl, v)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Serve cells: prefill / decode of the aggregated global model
+
+
+def _serve_adapters_abs(model: Model, dtype=jnp.float32):
+    """Abstract rank-masked global adapter tree (rank-2 leaves + scale)."""
+    lora = model.arch.lora
+
+    def make():
+        ad = lora_lib.init_adapters(model, jax.random.PRNGKey(0),
+                                    num_clients=0, dtype=dtype)
+        ranks = jnp.full((model.num_flat_layers,), lora.r_others, jnp.int32)
+        return lora_lib.mask_adapters(model, ad, ranks)
+
+    return jax.eval_shape(make)
+
+
+def build_serve_cell(arch: ArchConfig, shape: ShapeConfig, mesh,
+                     *, unroll: bool = False,
+                     seq_shard: bool = True) -> Cell:
+    arch = tune_arch_for_cell(arch, shape, num_clients=1)
+    model = build_model(arch, unroll=unroll)
+    # SP only helps multi-token (prefill) activations; decode is 1 token
+    policy = _policy(mesh, client_mode=False,
+                     seq_shard=seq_shard and shape.kind == "prefill")
+
+    key = jax.random.PRNGKey(0)
+    base_abs = jax.eval_shape(
+        functools.partial(model.init_params, dtype=PARAM_DTYPE), key)
+    ad_abs = _serve_adapters_abs(model, dtype=PARAM_DTYPE)
+    batch_abs = model.input_specs(shape, num_clients=0, dtype=PARAM_DTYPE)
+    b = shape.global_batch
+    cache_abs = jax.eval_shape(
+        functools.partial(model.init_cache, (b,), shape.seq_len,
+                          PARAM_DTYPE))
+
+    if shape.kind == "prefill":
+        def fn(params, adapters, batch, cache):
+            return model.prefill(params, adapters, batch, cache,
+                                 policy=policy)
+        args = (base_abs, ad_abs, batch_abs, cache_abs)
+    else:  # decode: one new token against a seq_len-deep cache
+        def fn(params, adapters, tokens, cache):
+            return model.decode_step(params, adapters, tokens, cache,
+                                     policy=policy)
+        args = (base_abs, ad_abs, batch_abs["tokens"], cache_abs)
+
+    base_specs = shard_rules.param_specs(base_abs, mesh)
+    cache_specs = shard_rules.cache_specs(cache_abs, mesh)
+    to_sh = lambda specs: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+    tok_specs = shard_rules.batch_specs(
+        batch_abs if shape.kind == "prefill" else batch_abs["tokens"],
+        mesh, client_dim=False)
+    in_sh = (to_sh(base_specs), _replicate(mesh, ad_abs),
+             to_sh(tok_specs), to_sh(cache_specs))
+    out_sh = (None, to_sh(cache_specs))
+    return Cell(fn, args, in_sh, out_sh, donate_argnums=(3,), model=model,
+                info={"kind": shape.kind, "batch": b,
+                      "seq_len": shape.seq_len})
+
+
+def build_cell(arch: ArchConfig, shape: ShapeConfig, mesh, **kw) -> Cell:
+    if shape.kind == "train":
+        return build_train_cell(arch, shape, mesh, **kw)
+    kw.pop("remat", None)
+    kw.pop("ce_chunk", None)
+    kw.pop("num_clients", None)
+    return build_serve_cell(arch, shape, mesh, **kw)

@@ -1,0 +1,142 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh).
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init) — do not move them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                       # all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape train_4k --multi-pod --json out.json
+
+Per cell it prints memory_analysis() (proves the cell fits a 16 GB v5e
+chip) and cost_analysis() (FLOPs/bytes feeding EXPERIMENTS.md §Roofline).
+Sharding mismatches, compile-time OOM or unsupported collectives here are
+bugs in the framework, not in the harness.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.config import SHAPES
+from repro.configs import ASSIGNED, get_config
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import model_flops_for, roofline_from_compiled
+
+HBM_PER_CHIP = 16 * 1024 ** 3      # v5e
+
+
+def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
+             verbose: bool = True, cell_kw: Optional[Dict] = None
+             ) -> Dict[str, Any]:
+    arch = get_config(arch_name)
+    shape = SHAPES[shape_name]
+    ok, why = arch.shape_applicable(shape)
+    rec: Dict[str, Any] = {
+        "arch": arch_name, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+    }
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        if verbose:
+            print(f"SKIP  {arch_name} x {shape_name}: {why}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, **(cell_kw or {}))
+    with mesh:
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate_argnums)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    roof = roofline_from_compiled(
+        compiled, model_flops=model_flops_for(arch, shape),
+        num_devices=n_dev)
+    peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        devices=n_dev,
+        bytes_per_device=int(peak),
+        fits_hbm=bool(peak <= HBM_PER_CHIP),
+        roofline=roof,
+        info=cell.info,
+    )
+    if verbose:
+        print(f"OK    {arch_name} x {shape_name} [{rec['mesh']}] "
+              f"mem/dev={peak / 2**30:.2f} GiB fits={rec['fits_hbm']} "
+              f"flops/dev={roof['hlo_flops_per_dev']:.3e} "
+              f"coll/dev={roof['collective_bytes_per_dev']:.3e}B "
+              f"dominant={roof['dominant']} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print(f"      memory_analysis: args={mem.argument_size_in_bytes:,} "
+              f"out={mem.output_size_in_bytes:,} "
+              f"temp={mem.temp_size_in_bytes:,} "
+              f"alias={mem.alias_size_in_bytes:,}")
+        print(f"      cost_analysis: flops={roof['hlo_flops_per_dev']:.4e} "
+              f"bytes={roof['hlo_bytes_per_dev']:.4e} "
+              f"collectives={roof['collectives']} "
+              f"useful_frac={roof.get('useful_fraction', 0):.3f}")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="one architecture (default: all assigned)")
+    ap.add_argument("--shape", default=None,
+                    help="one shape (default: all four)")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="2x16x16 multi-pod mesh (default single pod 16x16)")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--json", default=None, help="write results JSON")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else ASSIGNED
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    failed = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    results.append(run_cell(arch, shape, multi_pod=mp))
+                except Exception as e:
+                    failed += 1
+                    traceback.print_exc()
+                    results.append({"arch": arch, "shape": shape,
+                                    "mesh": "2x16x16" if mp else "16x16",
+                                    "status": "error", "error": str(e)})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    print(f"\n== dry-run summary: {n_ok} ok, {n_skip} skipped, "
+          f"{failed} failed, of {len(results)} cells ==")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

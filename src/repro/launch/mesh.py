@@ -1,0 +1,21 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module never
+touches jax device state (required so smoke tests see 1 CPU device while
+the dry-run sees 512 placeholder devices)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = one v5e pod; (2,16,16) = two pods, 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU tests exercising the sharded code path."""
+    return jax.make_mesh((1, 1), ("data", "model"))

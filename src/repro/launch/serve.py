@@ -1,0 +1,97 @@
+"""Serving driver: batched prefill + decode of a fine-tuned global model.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gpt2-small \
+      --reduced --batch 4 --prompt-len 32 --gen 16
+
+Loads a SplitFT checkpoint when given (--ckpt), otherwise serves the
+freshly initialized model (useful for shape/pipeline validation).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt2-small")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+    from repro.config import reduced as reduced_cfg
+    from repro.configs import get_config
+    from repro.core import lora as lora_lib
+    from repro.core.system import SplitFTSystem, SystemConfig
+    from repro.models.model import build_model
+
+    arch = get_config(args.arch)
+    if args.reduced:
+        arch = reduced_cfg(arch)
+    model = build_model(arch)
+    key = jax.random.PRNGKey(args.seed)
+
+    if args.ckpt:
+        system = SplitFTSystem(
+            arch, SystemConfig(num_samples=64, eval_samples=16,
+                               checkpoint_dir=args.ckpt), seed=args.seed)
+        assert system.restore(), f"no checkpoint under {args.ckpt}"
+        params, adapters = system.serve_model()
+    else:
+        params = model.init_params(key)
+        ad = lora_lib.init_adapters(model, key)
+        ranks = jnp.full((model.num_flat_layers,), arch.lora.r_others,
+                         jnp.int32)
+        adapters = lora_lib.mask_adapters(model, ad, ranks)
+
+    b, pl, g = args.batch, args.prompt_len, args.gen
+    v = arch.model.vocab_size
+    tokens = jax.random.randint(key, (b, pl), 3, v)
+    extra = {}
+    if arch.model.family == "audio":
+        extra["frames"] = jax.random.normal(
+            key, (b, arch.model.encoder_seq_len, arch.model.d_model)) * 0.02
+    if arch.model.family == "vlm" and arch.model.frontend_prefix_len:
+        extra["prefix"] = jax.random.normal(
+            key, (b, arch.model.frontend_prefix_len,
+                  arch.model.d_model)) * 0.02
+
+    cache = model.init_cache((b,), pl + g)
+
+    prefill = jax.jit(lambda p, a, bt, c: model.prefill(p, a, bt, c))
+    decode = jax.jit(lambda p, a, t, c: model.decode_step(p, a, t, c))
+
+    t0 = time.time()
+    batch = {"tokens": tokens}
+    batch.update(extra)
+    logits, cache = prefill(params, adapters, batch, cache)
+    nxt = jnp.argmax(logits[:, -1], -1)[:, None]
+    out = [np.asarray(nxt)]
+    t1 = time.time()
+    for _ in range(g - 1):
+        logits, cache = decode(params, adapters, nxt, cache)
+        nxt = jnp.argmax(logits[:, -1], -1)[:, None]
+        out.append(np.asarray(nxt))
+    jax.block_until_ready(nxt)
+    t2 = time.time()
+
+    gen = np.concatenate(out, axis=1)
+    print(f"prefill {b}x{pl}: {t1 - t0:.3f}s   "
+          f"decode {g - 1} steps: {t2 - t1:.3f}s "
+          f"({(t2 - t1) / max(g - 1, 1) * 1e3:.1f} ms/tok)")
+    print(f"generated ids (first row): {gen[0][:16].tolist()}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,200 @@
+"""Mamba2 (SSD) block — init + train/prefill/decode application.
+
+Block structure (per arXiv:2405.21060):
+
+  u -> norm -> in_proj -> [x (d_inner) | z (d_inner) | B (G*N) | C (G*N) | dt (H)]
+  (x|B|C) -> causal depthwise conv (width W) -> silu
+  dt -> softplus(dt + dt_bias);  A = -exp(A_log)  (per head)
+  y = SSD_scan(x, dt, A, B, C) + D * x          (heads H = d_inner / P)
+  y -> gated RMSNorm (y * silu(z)) -> out_proj -> residual
+
+LoRA targets: "ssm_in" (in_proj) and "ssm_out" (out_proj) — the adapted
+analogues of the paper's attention projections (DESIGN.md §6).
+
+Decode carries two cache pieces per layer:
+  conv:  ([N,]B, W-1, d_conv_ch) rolling window of pre-conv activations
+  state: ([N,]B, H, P, N_state) SSD recurrent state
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import common
+from repro.models.common import ShardingPolicy, apply_norm
+from repro.models.transformer import lora_apply, _ad
+from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.kernels.ssd_scan import ref as ssd_ref
+
+Params = Dict[str, Any]
+
+
+def conv_channels(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def in_proj_dim(cfg: ModelConfig) -> int:
+    return 2 * cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state + cfg.ssm_heads
+
+
+def init_ssm(key, cfg: ModelConfig, n_layers: int, *, dtype) -> Params:
+    d = cfg.d_model
+    di = cfg.d_inner
+    h = cfg.ssm_heads
+    keys = jax.random.split(key, 4)
+
+    def mat(k, din, dout):
+        return jax.vmap(
+            lambda kk: common.dense_init(kk, din, dout, dtype))(
+                jax.random.split(k, n_layers))
+
+    p: Params = {
+        "norm1": {"scale": jnp.ones((n_layers, d), dtype)},
+        "in_proj": mat(keys[0], d, in_proj_dim(cfg)),
+        "conv_w": (jax.random.normal(keys[1],
+                                     (n_layers, cfg.ssm_conv_width,
+                                      conv_channels(cfg)), dtype) * 0.1),
+        "conv_b": jnp.zeros((n_layers, conv_channels(cfg)), dtype),
+        # A in [-e, -1/e] at init (log-uniform-ish), dt bias ~ softplus^-1
+        "A_log": jnp.zeros((n_layers, h), dtype),
+        "D": jnp.ones((n_layers, h), dtype),
+        "dt_bias": jnp.full((n_layers, h), 0.5, dtype),
+        "gnorm": {"scale": jnp.ones((n_layers, di), dtype)},
+        "out_proj": mat(keys[2], di, d),
+    }
+    return p
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    di = cfg.d_inner
+    gn = cfg.ssm_groups * cfg.ssm_state
+    h = cfg.ssm_heads
+    x = proj[..., :di]
+    z = proj[..., di:2 * di]
+    b = proj[..., 2 * di:2 * di + gn]
+    c = proj[..., 2 * di + gn:2 * di + 2 * gn]
+    dt = proj[..., 2 * di + 2 * gn:]
+    return x, z, b, c, dt
+
+
+def _causal_conv(xbc, w, b, *, prefill_cache=None):
+    """Depthwise causal conv over ([N,]B, S, C); w (W, C)."""
+    width = w.shape[0]
+    lead = xbc.shape[:-2]
+    s, ch = xbc.shape[-2], xbc.shape[-1]
+    flat = xbc.reshape((-1, s, ch))
+    pad = jnp.zeros(flat.shape[:1] + (width - 1, ch), flat.dtype)
+    padded = jnp.concatenate([pad, flat], axis=1)
+    out = jax.lax.conv_general_dilated(
+        padded, w[:, None, :].astype(flat.dtype),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=ch)
+    out = out + b.astype(out.dtype)
+    return out.reshape(lead + (s, ch))
+
+
+def ssm_apply(p: Params, adapters: Optional[Params], u,
+              *, cfg: ModelConfig, policy: ShardingPolicy, mode: str,
+              cache: Optional[Params] = None):
+    """One SSD sub-block.  u ([N,]B,S,d) -> (out, new_cache)."""
+    h = cfg.ssm_heads
+    ph = cfg.ssm_head_dim
+    g, ns = cfg.ssm_groups, cfg.ssm_state
+    di = cfg.d_inner
+
+    y = apply_norm(p["norm1"], u, kind=cfg.norm, eps=cfg.norm_eps)
+    proj = lora_apply(y, p["in_proj"], _ad(adapters, "ssm_in"))
+    x, z, bmat, cmat, dt = _split_proj(cfg, proj)
+
+    xbc = jnp.concatenate([x, bmat, cmat], axis=-1)
+    new_cache = cache
+    if mode == "decode":
+        assert cache is not None and u.shape[-2] == 1
+        # rolling conv window: shift in the new pre-conv activation
+        win = jnp.concatenate([cache["conv"], xbc], axis=-2)   # (...,W, C)
+        conv_out = jnp.einsum("...wc,wc->...c", win,
+                              p["conv_w"].astype(win.dtype))
+        conv_out = conv_out + p["conv_b"].astype(conv_out.dtype)
+        conv_out = jax.nn.silu(conv_out)[..., None, :]          # (...,1,C)
+        new_conv = win[..., 1:, :]
+    else:
+        conv_out = jax.nn.silu(
+            _causal_conv(xbc, p["conv_w"], p["conv_b"]))
+        new_conv = None
+        if cache is not None:
+            # keep the last W-1 pre-conv activations for decode continuation
+            new_conv = xbc[..., -(p["conv_w"].shape[0] - 1):, :]
+
+    xc = conv_out[..., :di]
+    bc = conv_out[..., di:di + g * ns]
+    cc = conv_out[..., di + g * ns:]
+
+    lead = u.shape[:-2]
+    s = u.shape[-2]
+    xh = xc.reshape(lead + (s, h, ph))
+    bh = bc.reshape(lead + (s, g, ns))
+    ch_ = cc.reshape(lead + (s, g, ns))
+    dtp = jax.nn.softplus(dt.astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if mode == "decode":
+        st = cache["state"]
+        yss, new_state = ssd_ref.ssd_decode_step(
+            st.reshape((-1, h, ph, ns)),
+            xh[..., 0, :, :].reshape((-1, h, ph)),
+            dtp[..., 0, :].reshape((-1, h)),
+            a,
+            bh[..., 0, :, :].reshape((-1, g, ns)),
+            ch_[..., 0, :, :].reshape((-1, g, ns)))
+        yss = yss.reshape(lead + (1, h, ph))
+        new_cache = {"conv": new_conv,
+                     "state": new_state.reshape(st.shape)}
+    else:
+        flat = lambda t: t.reshape((-1,) + t.shape[len(lead):])
+        chunk = min(cfg.ssm_chunk, s)
+        pad = (-s) % chunk
+        def padded(t):
+            # zero-pad the seq axis; dt=0 there makes padding a no-op on the
+            # state (decay exp(0)=1, update dt*x=0)
+            f = flat(t)
+            if pad:
+                w = [(0, 0)] * f.ndim
+                w[1] = (0, pad)
+                f = jnp.pad(f, w)
+            return f
+        if cache is not None:
+            yflat, st = ssd_ref.ssd_chunked(
+                padded(xh), padded(dtp), a, padded(bh), padded(ch_),
+                chunk=chunk, return_state=True)
+            new_cache = {"conv": new_conv,
+                         "state": st.reshape(lead + (h, ph, ns))}
+        else:
+            yflat = ssd_ops.ssd_scan(padded(xh), padded(dtp), a, padded(bh),
+                                     padded(ch_), chunk=chunk)
+        yss = yflat[:, :s].reshape(lead + (s, h, ph))
+
+    yss = yss + p["D"].astype(yss.dtype)[:, None] * xh
+    yflat2 = yss.reshape(lead + (s, di))
+
+    # gated RMSNorm then output projection
+    gated = yflat2 * jax.nn.silu(z.astype(yflat2.dtype))
+    gated = apply_norm(p["gnorm"], gated, kind="rmsnorm", eps=cfg.norm_eps)
+    out = lora_apply(gated, p["out_proj"], _ad(adapters, "ssm_out"))
+    return out, new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, lead: Tuple[int, ...], dtype) -> Params:
+    """Per-layer decode cache for one SSM layer (leading dims = [N,]B)."""
+    return {
+        "conv": jnp.zeros(lead + (cfg.ssm_conv_width - 1, conv_channels(cfg)),
+                          dtype),
+        "state": jnp.zeros(lead + (cfg.ssm_heads, cfg.ssm_head_dim,
+                                   cfg.ssm_state), jnp.float32),
+    }
+

@@ -1,0 +1,382 @@
+"""Attention / MLP / MoE block machinery.
+
+Conventions (shared across the zoo):
+
+  * Parameters for a block *group* are stacked along a leading layer axis
+    `Lg`; execution either scans over that axis (homogeneous deep stacks)
+    or indexes it with static ints (unrolled heterogeneous stacks).
+  * Activations may carry a leading **client axis** `N` in SplitFT training
+    ((N, B, S, d)); serving activations are (B, S, d).  All code here is
+    written with `...` batch dims so both layouts flow through unchanged.
+  * LoRA adapters are slices {"A": ([N,] d_in, r), "B": ([N,] r, d_out),
+    "scale": scalar or (N,)}: rank-2 leaves are shared (server-side or
+    serving), rank-3 leaves are per-client.  `lora_apply` dispatches.
+  * Sharding is expressed through ShardingPolicy.constrain calls with
+    logical axis tuples; on mesh=None they are no-ops.
+
+Modes: "train"/"prefill" run full sequences through flash attention;
+"decode" runs one token against a KV cache via the flash-decode kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import common
+from repro.models.common import ShardingPolicy, activate, apply_norm, is_glu
+from repro.kernels.flash_attention import ops as flash_ops
+from repro.kernels.decode_attention import ops as decode_ops
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# LoRA application (client-batched aware)
+
+
+def lora_apply(x, w, adapter: Optional[Params], bias=None):
+    """y = x @ W (+ s (x A) B) (+ bias).
+
+    x: (N, ..., k) or (..., k); adapter leaves rank-3 => leading client dim
+    matching x's axis 0."""
+    if adapter is None:
+        y = x @ w
+    elif adapter["A"].ndim == 2:
+        y = common.lora_dense(x, w, None, adapter)
+    else:
+        # per-client adapters: batch the low-rank path over axis 0
+        a, b = adapter["A"], adapter["B"]
+        scale = adapter["scale"]
+        xa = jnp.einsum("n...k,nkr->n...r", x, a)
+        delta = jnp.einsum("n...r,nrd->n...d", xa, b)
+        extra = (1,) * (x.ndim - 1)          # broadcast over all but N
+        y = x @ w + scale.reshape(scale.shape[:1] + extra).astype(x.dtype) \
+            * delta.astype(x.dtype)
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def _ad(adapters: Optional[Params], name: str) -> Optional[Params]:
+    if adapters is None:
+        return None
+    return adapters.get(name)
+
+
+# ---------------------------------------------------------------------------
+# Attention block
+#
+# params: norm1{scale[,bias]}, wq (d, H*hd), wk/wv (d, KVH*hd), wo (H*hd, d)
+#         [bq/bk/bv/bo biases], and for cross-attention: xnorm, xwq, xwk,
+#         xwv, xwo (+biases).
+
+
+def init_attention(key, cfg: ModelConfig, n_layers: int, *, cross: bool,
+                   dtype) -> Params:
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    keys = jax.random.split(key, 8)
+
+    def mat(k, din, dout):
+        return jax.vmap(
+            lambda kk: common.dense_init(kk, din, dout, dtype))(
+                jax.random.split(k, n_layers))
+
+    p: Params = {
+        "norm1": {"scale": jnp.ones((n_layers, d), dtype)},
+        "wq": mat(keys[0], d, h * hd),
+        "wk": mat(keys[1], d, kvh * hd),
+        "wv": mat(keys[2], d, kvh * hd),
+        "wo": mat(keys[3], h * hd, d),
+    }
+    if cfg.norm == "layernorm":
+        p["norm1"]["bias"] = jnp.zeros((n_layers, d), dtype)
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((n_layers, h * hd), dtype)
+        p["bk"] = jnp.zeros((n_layers, kvh * hd), dtype)
+        p["bv"] = jnp.zeros((n_layers, kvh * hd), dtype)
+        p["bo"] = jnp.zeros((n_layers, d), dtype)
+    if cross:
+        p["xnorm"] = {"scale": jnp.ones((n_layers, d), dtype)}
+        if cfg.norm == "layernorm":
+            p["xnorm"]["bias"] = jnp.zeros((n_layers, d), dtype)
+        p["xwq"] = mat(keys[4], d, h * hd)
+        p["xwk"] = mat(keys[5], d, kvh * hd)
+        p["xwv"] = mat(keys[6], d, kvh * hd)
+        p["xwo"] = mat(keys[7], h * hd, d)
+    return p
+
+
+def _split_heads(t, n_heads, hd):
+    return t.reshape(t.shape[:-1] + (n_heads, hd))
+
+
+def _merge_heads(t):
+    return t.reshape(t.shape[:-2] + (t.shape[-2] * t.shape[-1],))
+
+
+def attention_apply(p: Params, adapters: Optional[Params], x,
+                    *, cfg: ModelConfig, policy: ShardingPolicy,
+                    mode: str, causal: bool, window: int,
+                    rope: Optional[Tuple[Any, Any]],
+                    cache: Optional[Params] = None,
+                    memory=None, mem_cache: Optional[Params] = None):
+    """One attention sub-block (pre-norm, residual added by caller).
+
+    x: ([N,] B, S, d).  Returns (attn_out, new_cache, new_mem_cache).
+    cache: {"k": (B,Smax,KVH,hd), "v": ..., "len": (B,)} for self-attention
+    decode; mem_cache caches cross-attention K/V after first use."""
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    lead = x.shape[:-2]          # ([N,] B) or (B,)
+    s = x.shape[-2]
+
+    y = apply_norm(p["norm1"], x, kind=cfg.norm, eps=cfg.norm_eps)
+    q = lora_apply(y, p["wq"], _ad(adapters, "q"), p.get("bq"))
+    k = lora_apply(y, p["wk"], _ad(adapters, "k"), p.get("bk"))
+    v = lora_apply(y, p["wv"], _ad(adapters, "v"), p.get("bv"))
+    q = _split_heads(q, h, hd)
+    k = _split_heads(k, kvh, hd)
+    v = _split_heads(v, kvh, hd)
+    q = policy.heads(q)
+    k = policy.heads(k)
+    v = policy.heads(v)
+
+    if rope is not None:
+        cos, sin = rope
+        q = common.apply_rope(q, cos, sin)
+        k = common.apply_rope(k, cos, sin)
+
+    new_cache = cache
+    if mode == "decode":
+        assert cache is not None and s == 1
+        # write the new K/V at position len, then attend over the cache
+        idx = cache["len"]                                     # (B,)
+        kc = policy.cache_kv(_write_cache(cache["k"], k[..., 0, :, :], idx))
+        vc = policy.cache_kv(_write_cache(cache["v"], v[..., 0, :, :], idx))
+        q1 = q[..., 0, :, :]                                   # ([N,]B,H,hd)
+        flat_q = q1.reshape((-1,) + q1.shape[-2:])
+        flat_k = kc.reshape((-1,) + kc.shape[-3:])
+        flat_v = vc.reshape((-1,) + vc.shape[-3:])
+        flat_len = jnp.broadcast_to(idx + 1, lead).reshape(-1)
+        o = decode_ops.decode_attention(flat_q, flat_k, flat_v, flat_len,
+                                        window=window)
+        o = o.reshape(q1.shape)[..., None, :, :]               # ([N,]B,1,H,hd)
+        new_cache = {"k": kc, "v": vc, "len": cache["len"] + 1}
+    else:
+        flat = lambda t: t.reshape((-1,) + t.shape[len(lead):])
+        o = flash_ops.flash_attention(flat(q), flat(k), flat(v),
+                                      causal=causal, window=window)
+        o = o.reshape(lead + o.shape[1:])
+        if cache is not None:   # prefill: populate the cache
+            kc = policy.cache_kv(_bulk_write(cache["k"], k))
+            vc = policy.cache_kv(_bulk_write(cache["v"], v))
+            new_cache = {"k": kc, "v": vc,
+                         "len": cache["len"] + k.shape[-3]}
+
+    o = policy.heads(o)
+    out = lora_apply(_merge_heads(o), p["wo"], _ad(adapters, "o"),
+                     p.get("bo"))
+
+    new_mem_cache = mem_cache
+    if memory is not None or mem_cache is not None:
+        # cross-attention (whisper decoder): keys/values from encoder output
+        y2 = apply_norm(p["xnorm"], x + out, kind=cfg.norm, eps=cfg.norm_eps)
+        q2 = _split_heads(lora_apply(y2, p["xwq"], _ad(adapters, "xq")), h, hd)
+        if mem_cache is not None and "k" in mem_cache:
+            mk, mv = mem_cache["k"], mem_cache["v"]
+        else:
+            mk = _split_heads(lora_apply(memory, p["xwk"],
+                                         _ad(adapters, "xk")), kvh, hd)
+            mv = _split_heads(lora_apply(memory, p["xwv"],
+                                         _ad(adapters, "xv")), kvh, hd)
+            if mem_cache is not None:
+                new_mem_cache = {"k": mk, "v": mv}
+        flat = lambda t: t.reshape((-1,) + t.shape[len(lead):])
+        o2 = flash_ops.flash_attention(flat(q2), flat(mk), flat(mv),
+                                       causal=False)
+        o2 = o2.reshape(lead + o2.shape[1:])
+        out = out + lora_apply(_merge_heads(o2), p["xwo"],
+                               _ad(adapters, "xo"))
+    return out, new_cache, new_mem_cache
+
+
+def _write_cache(cache, kv_new, idx):
+    """cache ([N,]B,Smax,KVH,hd); kv_new ([N,]B,KVH,hd); idx (B,)."""
+    pos = jax.lax.broadcasted_iota(jnp.int32, cache.shape[:-2],
+                                   cache.ndim - 3)     # ([N,]B,Smax)
+    mask = (pos == idx[..., None])[..., None, None]
+    return jnp.where(mask, kv_new[..., None, :, :].astype(cache.dtype), cache)
+
+
+def _bulk_write(cache, kv):
+    """Prefill write: kv ([N,]B,S,KVH,hd) into cache (...,Smax,KVH,hd)."""
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache, kv.astype(cache.dtype), 0, axis=cache.ndim - 3)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP block
+
+
+def init_mlp(key, cfg: ModelConfig, n_layers: int, *, dtype,
+             d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    keys = jax.random.split(key, 3)
+
+    def mat(k, din, dout):
+        return jax.vmap(
+            lambda kk: common.dense_init(kk, din, dout, dtype))(
+                jax.random.split(k, n_layers))
+
+    p: Params = {
+        "norm2": {"scale": jnp.ones((n_layers, d), dtype)},
+        "w_in": mat(keys[0], d, ff),
+        "w_out": mat(keys[1], ff, d),
+    }
+    if cfg.norm == "layernorm":
+        p["norm2"]["bias"] = jnp.zeros((n_layers, d), dtype)
+    if is_glu(cfg.activation):
+        p["w_gate"] = mat(keys[2], d, ff)
+    if cfg.mlp_bias:
+        p["b_in"] = jnp.zeros((n_layers, ff), dtype)
+        p["b_out"] = jnp.zeros((n_layers, d), dtype)
+    return p
+
+
+def mlp_apply(p: Params, adapters: Optional[Params], x, *, cfg: ModelConfig,
+              policy: ShardingPolicy):
+    y = apply_norm(p["norm2"], x, kind=cfg.norm, eps=cfg.norm_eps)
+    hin = lora_apply(y, p["w_in"], _ad(adapters, "mlp_in"), p.get("b_in"))
+    hin = policy.ffn(hin)
+    gate = None
+    if "w_gate" in p:
+        gate = lora_apply(y, p["w_gate"], _ad(adapters, "mlp_gate"))
+        gate = policy.ffn(gate)
+    hmid = activate(hin, gate, cfg.activation)
+    return lora_apply(hmid, p["w_out"], _ad(adapters, "mlp_out"),
+                      p.get("b_out"))
+
+
+# ---------------------------------------------------------------------------
+# MoE block (capacity-based token-choice routing, EP over the model axis)
+
+
+def init_moe(key, cfg: ModelConfig, n_layers: int, *, dtype) -> Params:
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    keys = jax.random.split(key, 8)
+
+    def emat(k, din, dout):
+        def one_layer(kk):
+            return jax.vmap(
+                lambda k3: common.dense_init(k3, din, dout, dtype))(
+                    jax.random.split(kk, e))
+        return jax.vmap(one_layer)(jax.random.split(k, n_layers))
+
+    def mat(k, din, dout):
+        return jax.vmap(
+            lambda kk: common.dense_init(kk, din, dout, dtype))(
+                jax.random.split(k, n_layers))
+
+    p: Params = {
+        "norm2": {"scale": jnp.ones((n_layers, d), dtype)},
+        "router": mat(keys[0], d, e),
+        "we_in": emat(keys[1], d, ff),     # (L, E, d, ff)
+        "we_out": emat(keys[2], ff, d),    # (L, E, ff, d)
+    }
+    if is_glu(cfg.activation):
+        p["we_gate"] = emat(keys[3], d, ff)
+    if cfg.num_shared_experts:
+        sf = ff * cfg.num_shared_experts
+        p["ws_in"] = mat(keys[4], d, sf)
+        p["ws_out"] = mat(keys[5], sf, d)
+        if is_glu(cfg.activation):
+            p["ws_gate"] = mat(keys[6], d, sf)
+    return p
+
+
+MOE_GROUP_TOKENS = 4096    # routing-group size: capacity bookkeeping and
+                           # the (T,E,C) dispatch tensors are per-group, so
+                           # this bounds dispatch memory/flops regardless of
+                           # the global batch (hillclimb knob, see §Perf)
+
+
+def moe_apply(p: Params, adapters: Optional[Params], x, *, cfg: ModelConfig,
+              policy: ShardingPolicy):
+    """Token-choice top-k routing with per-group capacity.
+
+    x: ([N,] B, S, d).  Tokens are regrouped into MOE_GROUP_TOKENS-sized
+    routing groups (sub-chunking the sequence): capacity is per group, so
+    the one-hot dispatch/combine tensors stay bounded.  The only
+    cross-device traffic is the activation resharding into the
+    expert-sharded einsum, which XLA derives from the EP sharding
+    constraint on the dispatched tensor."""
+    e, k = cfg.num_experts, cfg.moe_top_k
+    d = cfg.d_model
+    lead = x.shape[:-2]
+    s = x.shape[-2]
+
+    y = apply_norm(p["norm2"], x, kind=cfg.norm, eps=cfg.norm_eps)
+    yg = y.reshape((-1, s, d))                       # (G, T, d)
+    gs = MOE_GROUP_TOKENS
+    if s > gs and s % gs == 0:
+        yg = yg.reshape((-1, gs, d))
+    s = yg.shape[1]
+    g = yg.shape[0]
+
+    logits = jnp.einsum("gtd,de->gte", yg, p["router"].astype(yg.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)             # (G, T, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(int(k * s * cfg.moe_capacity_factor / e), 4 if s > 1 else k)
+    cap = min(cap, s * k)
+    # position of each (token, choice) in its expert queue
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.float32)        # (G,T,k,E)
+    flat = onehot.reshape(g, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                       # (G,T*k,E)
+    pos = jnp.einsum("gne,gne->gn", pos, flat).reshape(g, s, k)
+    keep = pos < cap
+    wgt = topv * keep                                            # (G,T,k)
+
+    # dispatch/combine tensors (G, T, E, C)
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap, dtype=yg.dtype)
+    disp = jnp.einsum("gtke,gtkc->gtec", onehot.astype(yg.dtype), pos_oh)
+    comb = jnp.einsum("gtk,gtke,gtkc->gtec", wgt.astype(yg.dtype),
+                      onehot.astype(yg.dtype), pos_oh)
+    disp = policy.moe_dispatch(disp)
+    comb = policy.moe_dispatch(comb)
+
+    xe = jnp.einsum("gtd,gtec->gecd", yg, disp)      # (G, E, C, d)
+    xe = policy.experts(xe)
+    hin = jnp.einsum("gecd,edf->gecf", xe, p["we_in"])
+    gate = None
+    if "we_gate" in p:
+        gate = jnp.einsum("gecd,edf->gecf", xe, p["we_gate"])
+    hmid = activate(hin, gate, cfg.activation)
+    ye = jnp.einsum("gecf,efd->gecd", hmid, p["we_out"])
+    ye = policy.experts(ye)
+    out = jnp.einsum("gecd,gtec->gtd", ye, comb)
+
+    # router z/aux losses are returned via an outer accumulator if needed;
+    # aux load-balancing loss:
+    aux = 0.0
+    if cfg.router_aux_loss:
+        me = jnp.mean(onehot.sum(2), axis=1)          # fraction routed (G,E)
+        pe = jnp.mean(probs, axis=1)                   # mean prob (G,E)
+        aux = cfg.router_aux_loss * e * jnp.mean(jnp.sum(me * pe, -1))
+
+    if cfg.num_shared_experts:
+        hin_s = lora_apply(y, p["ws_in"], _ad(adapters, "mlp_in"))
+        gate_s = None
+        if "ws_gate" in p:
+            gate_s = lora_apply(y, p["ws_gate"], _ad(adapters, "mlp_gate"))
+        hmid_s = activate(hin_s, gate_s, cfg.activation)
+        shared = lora_apply(hmid_s, p["ws_out"], _ad(adapters, "mlp_out"))
+        out = out.reshape(shared.shape) + shared
+    else:
+        out = out.reshape(y.shape)
+    return out, aux

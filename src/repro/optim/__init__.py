@@ -1,0 +1,6 @@
+from repro.optim.optimizers import adamw, sgd, make_optimizer  # noqa: F401
+from repro.optim.schedule import make_schedule  # noqa: F401
+from repro.optim.compression import (  # noqa: F401
+    topk_compress, topk_decompress, int8_quantize, int8_dequantize,
+    ErrorFeedback,
+)

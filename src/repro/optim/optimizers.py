@@ -1,0 +1,100 @@
+"""Optimizers as pure (init, update) pairs over pytrees.
+
+No optax dependency: the framework owns its optimizer substrate so the
+round engine can shard/checkpoint optimizer state like any other pytree.
+
+`update(grads, state, params, lr)` returns (new_params, new_state); `lr`
+is a traced scalar so schedules never trigger recompilation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Tuple[Any, Any]]
+
+
+def sgd(momentum: float = 0.0, weight_decay: float = 0.0,
+        grad_clip: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum:
+            return {"mu": jax.tree.map(jnp.zeros_like, params),
+                    "count": jnp.zeros((), jnp.int32)}
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        grads = _clip(grads, grad_clip)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g,
+                              state["mu"], grads)
+            step = mu
+            new_state = {"mu": mu, "count": state["count"] + 1}
+        else:
+            step = grads
+            new_state = {"count": state["count"] + 1}
+        new_params = jax.tree.map(
+            lambda p, s: p - lr * (s + weight_decay * p), params, step)
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+def adamw(beta1: float = 0.9, beta2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0, grad_clip: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda: jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": zeros(), "v": zeros(),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        grads = _clip(grads, grad_clip)
+        cnt = state["count"] + 1
+        m = jax.tree.map(
+            lambda m_, g: beta1 * m_ + (1 - beta1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: beta2 * v_
+            + (1 - beta2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - beta1 ** cnt.astype(jnp.float32)
+        bc2 = 1 - beta2 ** cnt.astype(jnp.float32)
+
+        def step(p, m_, v_):
+            upd = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            return (p - lr * (upd + weight_decay * p.astype(jnp.float32))
+                    .astype(p.dtype)).astype(p.dtype)
+
+        new_params = jax.tree.map(step, params, m, v)
+        return new_params, {"m": m, "v": v, "count": cnt}
+
+    return Optimizer(init, update)
+
+
+def _clip(grads, clip: float):
+    if not clip:
+        return grads
+    leaves = jax.tree.leaves(grads)
+    gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads)
+
+
+def make_optimizer(name: str, *, weight_decay: float = 0.0,
+                   beta1: float = 0.9, beta2: float = 0.999,
+                   eps: float = 1e-8, grad_clip: float = 0.0) -> Optimizer:
+    if name == "adamw":
+        return adamw(beta1, beta2, eps, weight_decay, grad_clip)
+    if name == "sgd":
+        return sgd(0.0, weight_decay, grad_clip)
+    if name == "sgdm":
+        return sgd(0.9, weight_decay, grad_clip)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,31 @@
+"""Learning-rate schedules (pure fns of a traced step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(kind: str, base_lr: float, *, warmup_steps: int = 0,
+                  total_steps: int = 0, min_ratio: float = 0.1):
+    """Returns lr(step) with warmup then {constant|cosine|linear} decay."""
+
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (s + 1) / max(warmup_steps, 1)) \
+            if warmup_steps else 1.0
+        if kind == "constant" or not total_steps:
+            decay = 1.0
+        elif kind == "cosine":
+            frac = jnp.clip((s - warmup_steps)
+                            / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+            decay = min_ratio + (1 - min_ratio) * 0.5 * \
+                (1 + jnp.cos(jnp.pi * frac))
+        elif kind == "linear":
+            frac = jnp.clip((s - warmup_steps)
+                            / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+            decay = 1.0 - (1 - min_ratio) * frac
+        else:
+            raise ValueError(kind)
+        return base_lr * warm * decay
+
+    return lr

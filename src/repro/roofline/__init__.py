@@ -1,0 +1,3 @@
+from repro.roofline.analysis import (  # noqa: F401
+    HW, collective_bytes, roofline_from_compiled, roofline_terms,
+)

@@ -1,0 +1,254 @@
+"""HLO-text cost model with while-loop trip-count accounting.
+
+XLA's `compiled.cost_analysis()` counts a while-loop body ONCE, so any
+scan-over-layers module under-reports flops/bytes/collectives by ~L.  This
+parser rebuilds the numbers from `compiled.as_text()`:
+
+  1. split the module into computations;
+  2. per computation, sum matmul flops (dot ops: 2 * result_elems *
+     contraction_size, shapes resolved via an instruction-shape table),
+     collective bytes (ring model), and HBM traffic (bytes written by
+     every instruction + parameter reads, a standard approximation);
+  3. propagate multiplicities: a while op's condition computation yields
+     the trip count (largest integer constant compared against the
+     induction variable); called computations inherit caller multiplicity.
+
+Fusion computations are skipped for flops (their dots appear inside the
+fusion body — we walk them too via calls) — on the CPU backend dots are
+not fused away, so the dot walk is sound.  Numbers are per-device
+(post-SPMD shapes).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# "  %name = bf16[1,16,4096]{...} op-name(...)"  (also tuple results)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?)([a-z0-9]+)\[([\d,]*)\]")
+
+_COMP_RE = re.compile(r"^(?:%?([\w.\-]+))\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+
+_WHILE_RE = re.compile(
+    r"while\(.*?\)(?:.*?)condition=%?([\w.\-]+)(?:.*?)body=%?([\w.\-]+)|"
+    r"while\(.*?\)(?:.*?)body=%?([\w.\-]+)(?:.*?)condition=%?([\w.\-]+)")
+
+_CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+_FUSION_RE = re.compile(r"fusion\(")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[str]] = {}
+        self.shape_of: Dict[str, Tuple[str, int]] = {}   # name -> (dtype, elems)
+        self._parse(text)
+
+    def _parse(self, text: str):
+        cur = None
+        for line in text.splitlines():
+            stripped = line.rstrip()
+            if stripped.endswith("{") and "=" not in stripped.split("(")[0]:
+                # computation header: "%comp_name (args) -> type {" or
+                # "ENTRY %main ... {"
+                m = re.match(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", stripped)
+                if m:
+                    cur = m.group(1)
+                    self.computations[cur] = []
+                    continue
+            if stripped == "}":
+                cur = None
+                continue
+            if cur is not None:
+                self.computations[cur].append(stripped)
+                im = _INSTR_RE.match(stripped)
+                if im:
+                    name, is_tuple, dtype, dims = im.groups()
+                    if not is_tuple:
+                        self.shape_of[name] = (dtype, _shape_elems(dims))
+
+    # -- per-op models -----------------------------------------------------
+
+    def _dot_flops(self, line: str) -> float:
+        """2 * result_elems * contraction_size for dot ops."""
+        im = _INSTR_RE.match(line)
+        if not im:
+            return 0.0
+        _, _, rdtype, rdims = im.groups()
+        result = _shape_elems(rdims)
+        # operands: first two %refs inside dot(...)
+        dm = re.search(r"\bdot\(([^)]*)\)", line)
+        if not dm:
+            return 0.0
+        refs = re.findall(r"%?([\w.\-]+)", dm.group(1))
+        shapes = [self.shape_of.get(r) for r in refs]
+        shapes = [s for s in shapes if s]
+        if len(shapes) < 2:
+            return 0.0
+        lhs, rhs = shapes[0][1], shapes[1][1]
+        # batch dims product
+        bm = re.search(r"lhs_batch_dims=\{([\d,]*)\}", line)
+        batch = 1
+        if bm and bm.group(1):
+            # resolve batch size from lhs shape dims
+            lm = re.search(r"dot\(\s*%?([\w.\-]+)", line)
+            # cheap route: batch = product of shared leading dims; derive
+            # from elems: batch * M * K = lhs ; batch * K * N = rhs ;
+            # batch * M * N = result  =>  K = sqrt(lhs*rhs/(batch*result))
+            # we still need batch: parse the lhs dims text directly
+            ldims = self._dims_of(refs[0] if refs else "")
+            bidx = [int(i) for i in bm.group(1).split(",") if i]
+            if ldims:
+                for i in bidx:
+                    if i < len(ldims):
+                        batch *= ldims[i]
+        k2 = (lhs / batch) * (rhs / batch) / max(result / batch, 1)
+        k = math.sqrt(max(k2, 1.0))
+        return 2.0 * result * k
+
+    def _dims_of(self, name: str) -> Optional[List[int]]:
+        s = self.shape_of.get(name)
+        if s is None:
+            return None
+        # need the raw dims — re-find in stored map? store dims too
+        return self._raw_dims.get(name)
+
+    # -- main walk -----------------------------------------------------------
+
+    def analyze(self) -> Dict[str, float]:
+        # build raw dims map lazily (dims needed for batch resolution)
+        self._raw_dims: Dict[str, List[int]] = {}
+        for comp in self.computations.values():
+            for line in comp:
+                im = _INSTR_RE.match(line)
+                if im:
+                    name, is_tuple, _, dims = im.groups()
+                    if not is_tuple:
+                        self._raw_dims[name] = [int(d) for d in
+                                                dims.split(",") if d]
+
+        entry = None
+        for name in self.computations:
+            if "main" in name or entry is None:
+                if entry is None or "main" in name:
+                    entry = name
+        totals = defaultdict(float)
+        self._walk(entry, 1.0, totals, set())
+        return dict(totals)
+
+    def _trip_count(self, cond_name: str) -> float:
+        """Largest integer constant in the loop condition (scan pattern)."""
+        best = 1
+        for line in self.computations.get(cond_name, []):
+            for m in _CONST_RE.finditer(line):
+                best = max(best, int(m.group(1)))
+        return float(best)
+
+    def _walk(self, comp_name: str, mult: float,
+              totals: Dict[str, float], stack: frozenset,
+              count_bytes: bool = True):
+        """count_bytes=False inside fusion bodies: a fusion's internal
+        values live in registers/cache; only the fusion's own output (and
+        its parameter reads) touch HBM — counted at the call site."""
+        if comp_name not in self.computations or comp_name in stack:
+            return
+        stack = stack | {comp_name}
+        for line in self.computations[comp_name]:
+            im = _INSTR_RE.match(line)
+            # while loops: recurse into body with trip multiplicity
+            wm = re.search(r"\bwhile\(", line)
+            if wm:
+                cm = re.search(r"condition=%?([\w.\-]+)", line)
+                bm = re.search(r"body=%?([\w.\-]+)", line)
+                if cm and bm:
+                    trips = self._trip_count(cm.group(1))
+                    totals["while_loops"] += 1
+                    self._walk(bm.group(1), mult * trips, totals, stack,
+                               count_bytes)
+                continue
+            if "dot(" in line:
+                totals["flops"] += mult * self._dot_flops(line)
+                totals["dots"] += mult
+            for kind in ("all-reduce", "all-gather", "reduce-scatter",
+                         "all-to-all", "collective-permute"):
+                if re.search(rf"\b{kind}(?:-start)?\(", line):
+                    self._collective(line, kind, mult, totals)
+                    break
+            cm = _CALL_RE.search(line)
+            if cm:
+                is_fusion = "fusion(" in line
+                # fusion bodies: flops yes, bytes no
+                self._walk(cm.group(1), mult, totals, stack,
+                           count_bytes and not is_fusion)
+            # HBM traffic: bytes of every top-level produced tensor
+            # (write); reads approximated as equal (2x-writes model)
+            if count_bytes and im and not im.group(2) \
+                    and "parameter(" not in line \
+                    and "constant(" not in line \
+                    and "get-tuple-element" not in line \
+                    and " tuple(" not in line \
+                    and "bitcast" not in line:
+                dtype, dims = im.group(3), im.group(4)
+                totals["bytes_written"] += mult * _shape_elems(dims) * \
+                    _DTYPE_BYTES.get(dtype, 4)
+        return
+
+    def _collective(self, line: str, kind: str, mult: float,
+                    totals: Dict[str, float]):
+        im = _INSTR_RE.match(line)
+        if not im:
+            return
+        is_tuple = im.group(2)
+        if is_tuple:
+            # tuple result (e.g. -start ops): sum member shapes
+            shapes = re.findall(r"([a-z0-9]+)\[([\d,]*)\]", line.split("=")[1])
+            nbytes = sum(_shape_elems(d) * _DTYPE_BYTES.get(t, 4)
+                         for t, d in shapes[:1])
+        else:
+            nbytes = _shape_elems(im.group(4)) * \
+                _DTYPE_BYTES.get(im.group(3), 4)
+        n = 1
+        gm = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+        if gm:
+            n = len(gm.group(1).split(","))
+        else:
+            gi = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+            if gi:
+                n = int(gi.group(2))
+        if n <= 1:
+            return
+        ring = (n - 1) / n
+        if kind == "all-reduce":
+            moved = 2 * nbytes * ring
+        elif kind == "all-gather":
+            moved = nbytes * ring
+        elif kind == "reduce-scatter":
+            moved = nbytes * (n - 1)
+        elif kind == "all-to-all":
+            moved = nbytes * ring
+        else:
+            moved = nbytes
+        totals[f"coll_{kind}"] += mult * moved
+        totals["collective_bytes"] += mult * moved
+        totals["collective_ops"] += mult
+
+
+def analyze_hlo(text: str) -> Dict[str, float]:
+    return HloModule(text).analyze()

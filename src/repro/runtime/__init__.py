@@ -1,0 +1,6 @@
+from repro.runtime.sharding import (  # noqa: F401
+    batch_specs, cache_specs, fit_spec, param_specs, adapter_specs,
+    shardings_for,
+)
+from repro.runtime.straggler import SpeedModel, deadline_survivors  # noqa: F401
+from repro.runtime.elastic import ClientPool  # noqa: F401

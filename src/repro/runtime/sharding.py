@@ -1,0 +1,193 @@
+"""Sharding rules: pytree -> PartitionSpec trees for the production mesh.
+
+Scheme (DESIGN.md §5):
+  * FSDP  — base weights sharded over the ("pod","data") axes on their
+    d_model-like dimension; XLA inserts per-layer all-gathers inside the
+    layer scan (weights are re-gathered per layer, never fully resident).
+  * TP    — head/ffn/vocab dimensions sharded over "model".
+  * EP    — MoE expert dimension sharded over "model" (attention stays TP).
+  * Client axis — stacked per-client adapters shard their N dim over
+    "data", aligning client groups with the data mesh axis.
+  * Divisibility fallback — every rule is filtered through fit_spec(),
+    which drops mesh axes that do not divide the corresponding dim (e.g.
+    batch=1 long-context decode).
+
+All functions take the *abstract* tree (ShapeDtypeStructs ok) — nothing
+here touches real device memory, which is what the dry-run requires.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+FSDP_AXES = ("pod", "data")
+TP_AXIS = "model"
+CLIENT_AXIS = "data"
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        return math.prod(_axis_size(mesh, n) for n in name)
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def fit_spec(shape: Tuple[int, ...], spec: Tuple, mesh: Mesh) -> P:
+    """Drop axes that are absent from the mesh or do not divide the dim."""
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        kept, prod = [], 1
+        for a in axes:
+            if a in mesh.shape and dim % (prod * mesh.shape[a]) == 0:
+                kept.append(a)
+                prod *= mesh.shape[a]
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+        else:
+            out.append(tuple(kept))
+    return P(*out)
+
+
+def _leaf_spec_for_path(path: str, ndim: int) -> Tuple:
+    """Logical spec by parameter name; dims right-aligned to the leaf."""
+    name = path.split("/")[-1]
+    full: Tuple
+
+    def pad(spec):
+        return (None,) * (ndim - len(spec)) + tuple(spec)
+
+    if name in ("tok",):
+        return pad((TP_AXIS, FSDP_AXES))      # vocab TP, d FSDP
+    if name in ("head",):
+        return pad((FSDP_AXES, TP_AXIS))
+    if name in ("pos", "enc_pos"):
+        return pad((None, None))
+    if name in ("wk", "wv", "xwk", "xwv"):
+        # GQA KV projections: the head count rarely divides the TP axis,
+        # so the out dim stays unsharded (the activations are replicated
+        # across TP anyway); FSDP carries the weight bytes.
+        return pad((FSDP_AXES, None))
+    if name in ("wq", "xwq", "w_in", "w_gate",
+                "in_proj", "router", "ws_in", "ws_gate"):
+        return pad((FSDP_AXES, TP_AXIS))      # (.., d_in, d_out-TP)
+    if name in ("wo", "xwo", "w_out", "out_proj", "ws_out"):
+        return pad((TP_AXIS, FSDP_AXES))
+    # MoE experts: EP over the TP axis; the FSDP axes shard the ff dim,
+    # NOT d_model — a d-sharded expert weight would be all-gathered per
+    # layer per microbatch (terabytes for 384-expert models), whereas
+    # ff-sharding keeps weights resident and exchanges only
+    # activation-sized tensors.
+    if name in ("we_in", "we_gate"):
+        return pad((TP_AXIS, None, FSDP_AXES))   # (L,E-EP,d,ff-FSDP)
+    if name in ("we_out",):
+        return pad((TP_AXIS, FSDP_AXES, None))   # (L,E-EP,ff-FSDP,d)
+    if name in ("bq", "b_in"):
+        return pad((TP_AXIS,))
+    if name in ("conv_w", "conv_b"):
+        return pad((TP_AXIS,)) if ndim <= 2 else pad((None, TP_AXIS))
+    if name in ("A_log", "D", "dt_bias"):
+        return pad((TP_AXIS,))
+    # norms, biases, scalars: replicate
+    return (None,) * ndim
+
+
+def _tree_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        keys = [getattr(p, "key", getattr(p, "idx", "?")) for p in path]
+        yield "/".join(str(k) for k in keys), leaf
+
+
+def param_specs(params, mesh: Mesh):
+    """PartitionSpec tree for model parameters."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        keys = "/".join(str(getattr(p, "key", "?")) for p in path)
+        logical = _leaf_spec_for_path(keys, np.ndim(leaf))
+        specs.append(fit_spec(np.shape(leaf), logical, mesh))
+    return jax.tree.unflatten(treedef, specs)
+
+
+def adapter_specs(adapters, mesh: Mesh, *, client_stacked: bool):
+    """Adapters: {group:{target:{"A","B"}}}.
+
+    Server adapters ((Lg, din, r)) are replicated (tiny); client-stacked
+    adapters ((Lg, N, din, r)) shard N over the client/data axis."""
+    def spec_of(leaf):
+        nd = np.ndim(leaf)
+        if client_stacked and nd >= 3:
+            logical = (None, CLIENT_AXIS) + (None,) * (nd - 2)
+        else:
+            logical = (None,) * nd
+        return fit_spec(np.shape(leaf), logical, mesh)
+
+    return jax.tree.map(spec_of, adapters)
+
+
+def batch_specs(batch, mesh: Mesh, *, client_dim: bool):
+    """tokens/labels/mask ([N,]B,S[,d]) and frames/prefix embeddings."""
+    def spec_of(leaf):
+        nd = np.ndim(leaf)
+        if client_dim:
+            rest = tuple(a for a in FSDP_AXES if a != CLIENT_AXIS)
+            logical = (CLIENT_AXIS, rest) + (None,) * (nd - 2)
+        else:
+            logical = (FSDP_AXES,) + (None,) * (nd - 1)
+        return fit_spec(np.shape(leaf), logical, mesh)
+
+    return jax.tree.map(spec_of, batch)
+
+
+def cache_specs(cache, mesh: Mesh):
+    """KV/SSM caches.
+
+    KV leaves (Lg, B, Smax, KVH, hd): batch over FSDP axes when divisible;
+    the sequence dim takes the model axis (sequence-parallel decode) —
+    KV heads rarely divide a 16-way TP axis, sharded-S always does.
+    SSM conv (Lg, B, W, C): C over model.  SSM state (Lg, B, H, P, N):
+    H over model."""
+    def spec_of(path: str, leaf):
+        nd = np.ndim(leaf)
+        name = path.split("/")[-1]
+        if name == "len":
+            return P()
+        if name in ("k", "v", "xk", "xv"):
+            # MUST match ShardingPolicy.cache_kv: sequence over the TP
+            # axis (a mismatch makes XLA bounce the cache between layouts
+            # every step — GBs of copies).
+            return fit_spec(np.shape(leaf),
+                            (None, FSDP_AXES, TP_AXIS, None, None), mesh)
+        if name == "conv":
+            return fit_spec(np.shape(leaf),
+                            (None, FSDP_AXES) + (None,) * (nd - 3)
+                            + (TP_AXIS,), mesh)
+        if name == "state":
+            return fit_spec(np.shape(leaf),
+                            (None, FSDP_AXES, TP_AXIS) + (None,) * (nd - 3),
+                            mesh)
+        return P(*(None,) * nd)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    specs = []
+    for path, leaf in flat:
+        keys = "/".join(str(getattr(p, "key", "?")) for p in path)
+        specs.append(spec_of(keys, leaf))
+    return jax.tree.unflatten(treedef, specs)
+
+
+def shardings_for(tree_specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,72 @@
+"""Straggler modeling and mitigation.
+
+On real federated hardware, per-round time = max over clients of
+(client compute + smashed-data transfer).  On a TPU pod the SPMD program
+gives every "client" identical silicon, so heterogeneity is *simulated*
+with a per-client speed model; the mitigation policies are the real
+deliverable and transfer unchanged to physical deployments:
+
+  * deadline-based partial aggregation — clients that would exceed the
+    round deadline are excluded from this round's FedAvg (survivor
+    re-weighting keeps the estimator unbiased w.r.t. sample counts);
+  * adaptive cut (paper C3) doubles as straggler mitigation: slow clients
+    shed layers, directly reducing their round time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SpeedModel:
+    """Per-client relative compute speed (1.0 = reference) and link
+    bandwidth (bytes/s), lognormally drawn."""
+
+    num_clients: int
+    seed: int = 0
+    speed_sigma: float = 0.5
+    bw_mean: float = 100e6          # 100 MB/s WAN-ish uplink
+    bw_sigma: float = 0.7
+    jitter_sigma: float = 0.1       # per-round multiplicative noise
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        self.speed = np.exp(rng.normal(0.0, self.speed_sigma,
+                                       self.num_clients))
+        self.bandwidth = self.bw_mean * np.exp(
+            rng.normal(0.0, self.bw_sigma, self.num_clients))
+
+    def round_times(self, *, cuts: Sequence[int], flops_per_layer: float,
+                    smashed_bytes: float, adapter_bytes: Sequence[float],
+                    round_idx: int = 0,
+                    ref_flops_per_s: float = 5e12) -> np.ndarray:
+        """Wall-clock estimate per client for one round.
+
+        compute = cut_i layers of forward+backward on the client device;
+        comm = smashed fwd+bwd (2x) + adapter sync, at client bandwidth."""
+        rng = np.random.RandomState(round_idx * 7919 + self.seed)
+        jitter = np.exp(rng.normal(0.0, self.jitter_sigma,
+                                   self.num_clients))
+        cuts = np.asarray(cuts, np.float64)
+        compute = cuts * flops_per_layer * 3.0 / \
+            (ref_flops_per_s * self.speed)
+        comm = (2.0 * smashed_bytes + np.asarray(adapter_bytes)) \
+            / self.bandwidth
+        return (compute + comm) * jitter
+
+
+def deadline_survivors(times: np.ndarray, *, deadline_frac: float = 1.5
+                       ) -> Tuple[np.ndarray, float]:
+    """Clients finishing within deadline_frac x median time survive.
+
+    Returns (bool mask, deadline).  Always keeps at least one client."""
+    med = float(np.median(times))
+    deadline = deadline_frac * med
+    mask = times <= deadline
+    if not mask.any():
+        mask = times == times.min()
+    return mask, deadline

@@ -1,0 +1,93 @@
+"""Data pipeline tests: partitioners (C4), corpus, loaders, tokenizers."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (ByteTokenizer, HashTokenizer, iid_partition,
+                        length_dirichlet_partition, make_client_loaders,
+                        partition_dataset, synthetic_corpus)
+from repro.data.partition import length_classes
+from repro.data.pipeline import stack_client_batches
+
+
+def test_byte_tokenizer_roundtrip():
+    t = ByteTokenizer()
+    s = "SplitFT: adaptive féderated split learning!"
+    assert t.decode(t.encode(s)) == s
+
+
+def test_hash_tokenizer_deterministic_in_vocab():
+    t = HashTokenizer(50257)
+    ids = t.encode("the same words the same ids")
+    assert ids == t.encode("the same words the same ids")
+    assert all(0 <= i < 50257 for i in ids)
+    assert ids[0] == t.BOS and ids[-1] == t.EOS
+
+
+def test_corpus_deterministic_and_length_spread():
+    a = synthetic_corpus(50, seed=3)
+    b = synthetic_corpus(50, seed=3)
+    assert a == b
+    lengths = [len(s.split()) for s in a]
+    assert max(lengths) > 4 * min(lengths)   # heavy-tailed spread
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(40, 200), clients=st.integers(2, 8),
+       alpha=st.floats(0.05, 100.0))
+def test_dirichlet_partition_is_a_partition(n, clients, alpha):
+    """Property: every sample assigned at most once; no client empty."""
+    rng = np.random.RandomState(0)
+    lengths = rng.randint(5, 500, size=n)
+    parts = length_dirichlet_partition(lengths, clients, alpha=alpha,
+                                       seed=1)
+    seen = np.concatenate(parts)
+    assert len(seen) <= n + clients          # +1 fallback sample/client
+    vals, counts = np.unique(seen, return_counts=True)
+    # duplicates only possible via the empty-client fallback
+    assert (counts > 1).sum() <= clients
+    assert all(len(p) > 0 for p in parts)
+
+
+def test_iid_partition_covers_everything():
+    parts = iid_partition(list(range(100)), 7, seed=0)
+    seen = np.sort(np.concatenate(parts))
+    np.testing.assert_array_equal(seen, np.arange(100))
+
+
+def test_alpha_controls_heterogeneity():
+    """Smaller alpha -> each client concentrated on fewer length classes."""
+    rng = np.random.RandomState(0)
+    lengths = rng.randint(5, 2000, size=4000)
+    cls = length_classes(lengths, 8)
+
+    def concentration(alpha):
+        parts = length_dirichlet_partition(lengths, 5, alpha=alpha,
+                                           num_classes=8, seed=2)
+        fracs = []
+        for p in parts:
+            hist = np.bincount(cls[p], minlength=8) / max(len(p), 1)
+            fracs.append(hist.max())
+        return np.mean(fracs)
+
+    assert concentration(0.05) > concentration(100.0) + 0.1
+
+
+def test_loaders_shapes_and_masks():
+    tok = HashTokenizer(1000)
+    texts = synthetic_corpus(40, seed=0)
+    samples = [np.asarray(tok.encode(t), np.int32) for t in texts]
+    parts = partition_dataset([len(s) for s in samples], 4,
+                              strategy="iid", seed=0)
+    loaders = make_client_loaders(samples, parts, batch_size=3, seq_len=32)
+    batches = [l.batch(0) for l in loaders]
+    stacked = stack_client_batches(batches)
+    assert stacked["tokens"].shape == (4, 3, 32)
+    assert stacked["labels"].shape == (4, 3, 32)
+    assert set(np.unique(stacked["loss_mask"])) <= {0.0, 1.0}
+    # determinism per (seed, round)
+    again = stack_client_batches([l.batch(0) for l in loaders])
+    np.testing.assert_array_equal(stacked["tokens"], again["tokens"])
+    different = stack_client_batches([l.batch(1) for l in loaders])
+    assert not np.array_equal(stacked["tokens"], different["tokens"])
