@@ -1,0 +1,53 @@
+"""Smashed-activation compression (beyond paper): bytes-on-wire vs
+loss-delta across the f2/f4 compressors in repro.core.smashed.
+
+For each compressor the gpt2-small config is trained end-to-end with the
+cut-boundary hook active, then `round_comm_bytes` reports the measured
+smashed-channel payload.  Columns of interest:
+
+  derived            final perplexity (lower = compression hurt less)
+  smashed_mb_round   per-round smashed bytes across clients (both
+                     directions), MB
+  smashed_ratio      dense/wire reduction of the smashed channel
+  ce_delta_pct       final eval CE delta vs the uncompressed run, %
+
+Deployment rule of thumb printed by the rows: int8 ~4x for ~0 loss;
+fp8 ~4x with no per-channel state; topk tunes ratio vs quality via
+`smashed_topk_frac`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import bench_arch, row, run_experiment
+from repro.core import comm
+from repro.models.model import build_model
+
+COMPRESSORS = ("none", "int8", "fp8", "topk")
+
+
+def run():
+    rows = []
+    base_ce = None
+    for comp in COMPRESSORS:
+        arch = bench_arch("gpt2-small")
+        arch = arch.replace(split=dataclasses.replace(
+            arch.split, smashed_compress=comp))
+        res = run_experiment(arch)
+        model = build_model(arch)
+        cb = comm.round_comm_bytes(
+            model, cuts=res["final_cuts"],
+            batch_size=arch.train.batch_size, seq_len=arch.train.seq_len,
+            smashed_compress=comp,
+            smashed_topk_frac=arch.split.smashed_topk_frac)
+        r = row(f"smashed_{comp}", res)
+        smashed = cb["smashed_up"] + cb["smashed_down"]
+        r["smashed_mb_round"] = float(smashed.sum() / 1e6)
+        r["smashed_ratio"] = float(cb["smashed_ratio"][0])
+        ce = res["final"]["ce"]
+        if comp == "none":
+            base_ce = ce
+        r["ce_delta_pct"] = 100.0 * (ce - base_ce) / max(base_ce, 1e-9)
+        rows.append(r)
+    return rows

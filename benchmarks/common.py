@@ -11,6 +11,12 @@ BENCH_SCALE:
 Output convention (consumed by benchmarks.run): each bench returns rows
 [{name, us_per_call, derived, **extra}] where us_per_call is the measured
 round wall-time and `derived` the figure's headline metric.
+
+BENCH_DRYRUN=1 (set by `benchmarks.run --dry-run`, used by the CI smoke
+job) shrinks everything to collection-test scale: 2 rounds of a 4-layer
+d=32 model.  Numbers are meaningless at that scale — the point is that
+every bench still builds its configs, compiles its step, and produces
+rows, so kernel/bench drift is caught without hardware.
 """
 
 from __future__ import annotations
@@ -26,11 +32,12 @@ from repro.config import ArchConfig, reduced
 from repro.configs import get_config
 from repro.core.system import SplitFTSystem, SystemConfig
 
-FULL = os.environ.get("BENCH_SCALE") == "full"
+DRYRUN = os.environ.get("BENCH_DRYRUN") == "1"
+FULL = os.environ.get("BENCH_SCALE") == "full" and not DRYRUN
 
-ROUNDS = 200 if FULL else 30
-SAMPLES = 12000 if FULL else 400
-EVAL_SAMPLES = 512 if FULL else 64
+ROUNDS = 200 if FULL else (2 if DRYRUN else 30)
+SAMPLES = 12000 if FULL else (48 if DRYRUN else 400)
+EVAL_SAMPLES = 512 if FULL else (16 if DRYRUN else 64)
 
 
 def bench_arch(name: str = "gpt2-small", *, layers: int = 12,
@@ -42,7 +49,14 @@ def bench_arch(name: str = "gpt2-small", *, layers: int = 12,
                two_side: Optional[bool] = None,
                lr: float = 3e-3) -> ArchConfig:
     arch = get_config(name)
-    if not FULL:
+    if DRYRUN:
+        arch = reduced(arch, layers=min(layers, 4), d_model=32, vocab=256,
+                       seq_len=16, batch=2)
+        arch = arch.replace(train=dataclasses.replace(
+            arch.train, lr_client=lr, lr_server=lr))
+        arch = arch.replace(data=dataclasses.replace(
+            arch.data, num_clients=3))
+    elif not FULL:
         arch = reduced(arch, layers=layers, d_model=64, vocab=2048,
                        seq_len=64, batch=4)
         arch = arch.replace(train=dataclasses.replace(
@@ -50,6 +64,12 @@ def bench_arch(name: str = "gpt2-small", *, layers: int = 12,
         arch = arch.replace(data=dataclasses.replace(
             arch.data, num_clients=5))
     kw: Dict[str, Any] = {}
+    if DRYRUN and cut is not None:
+        # the model just shrank to <= 4 layers: rescale the caller's cut so
+        # sweep points stay valid (and as distinct as 4 layers allow)
+        # instead of silently collapsing to the all-client configuration
+        L = arch.model.num_layers
+        cut = max(1, min(round(cut * L / max(layers, 1)), L - 1))
     if cut is not None or adaptive is not None:
         arch = arch.replace(split=dataclasses.replace(
             arch.split,

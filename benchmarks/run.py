@@ -3,6 +3,11 @@
   PYTHONPATH=src python -m benchmarks.run              # all (smoke scale)
   PYTHONPATH=src python -m benchmarks.run bench_cutlayer
   BENCH_SCALE=full PYTHONPATH=src python -m benchmarks.run   # paper scale
+  PYTHONPATH=src python -m benchmarks.run --dry-run    # CI smoke (minutes)
+
+--dry-run shrinks every bench to collection-test scale (see
+benchmarks.common) so CI catches kernel/bench drift on CPU without
+hardware; numbers produced under it are meaningless.
 
 Prints ``name,us_per_call,derived`` CSV and writes results/bench.json.
 """
@@ -23,13 +28,21 @@ BENCHES = [
     "bench_rank_sides",     # Fig 2a
     "bench_adaptive",       # Fig 3
     "bench_models",         # Fig 4
-    "bench_compression",    # beyond paper
+    "bench_compression",    # beyond paper (adapter channel)
+    "bench_smashed",        # beyond paper (smashed f2/f4 channel)
     "bench_roofline",       # §Roofline summary
 ]
 
 
 def main() -> int:
-    picked = sys.argv[1:] or BENCHES
+    argv = sys.argv[1:]
+    if "--dry-run" in argv:
+        # must land in os.environ before the bench modules (and through
+        # them benchmarks.common) are first imported below
+        os.environ["BENCH_DRYRUN"] = "1"
+        argv = [a for a in argv if a != "--dry-run"]
+        print("# dry-run: collection-test scale, numbers not meaningful")
+    picked = argv or BENCHES
     all_rows = []
     failed = []
     print("name,us_per_call,derived")

@@ -237,6 +237,12 @@ class SplitConfig:
                                         # empty -> {1..min(8, M-1)} ∪ {cut_layer}
     min_cut: int = 1
     max_cut: int = 0                    # 0 -> num_layers - 1
+    # Smashed-activation channel (f2 uplink / f4 gradient downlink)
+    # compressor: none | int8 | fp8 | topk (repro.core.smashed).  The paper
+    # models keep "none" (parity with its experiments); bandwidth-bound
+    # deployments of the large assigned archs default to int8.
+    smashed_compress: str = "none"
+    smashed_topk_frac: float = 0.1      # kept fraction for the topk scheme
 
     def buckets(self, num_layers: int) -> Tuple[int, ...]:
         if self.cut_buckets:

@@ -28,6 +28,7 @@ def config() -> ArchConfig:
     return ArchConfig(
         model=model,
         lora=LoRAConfig(r_others=16, r_cut=8, targets=("q", "k", "v", "o")),
-        split=SplitConfig(cut_layer=8, cut_buckets=(4, 8, 16, 24, 32)),
+        split=SplitConfig(cut_layer=8, cut_buckets=(4, 8, 16, 24, 32),
+                          smashed_compress="int8"),
         source="arXiv:2404.16821; unverified",
     )

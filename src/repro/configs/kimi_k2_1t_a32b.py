@@ -33,6 +33,7 @@ def config() -> ArchConfig:
     return ArchConfig(
         model=model,
         lora=LoRAConfig(r_others=16, r_cut=8, lora_on_experts=False),
-        split=SplitConfig(cut_layer=6, cut_buckets=(3, 6, 12, 20)),
+        split=SplitConfig(cut_layer=6, cut_buckets=(3, 6, 12, 20),
+                          smashed_compress="int8"),
         source="arXiv:2501.kimi2; unverified",
     )

@@ -25,6 +25,7 @@ def config() -> ArchConfig:
     return ArchConfig(
         model=model,
         lora=LoRAConfig(r_others=16, r_cut=8),
-        split=SplitConfig(cut_layer=4, cut_buckets=(2, 4, 8, 12, 16)),
+        split=SplitConfig(cut_layer=4, cut_buckets=(2, 4, 8, 12, 16),
+                          smashed_compress="int8"),
         source="arXiv:2407.21783; unverified",
     )

@@ -30,6 +30,7 @@ def config() -> ArchConfig:
     return ArchConfig(
         model=model,
         lora=LoRAConfig(r_others=16, r_cut=8, lora_on_experts=False),
-        split=SplitConfig(cut_layer=4, cut_buckets=(2, 4, 8, 16)),
+        split=SplitConfig(cut_layer=4, cut_buckets=(2, 4, 8, 16),
+                          smashed_compress="int8"),
         source="hf:meta-llama/Llama-4-Scout-17B-16E; unverified",
     )

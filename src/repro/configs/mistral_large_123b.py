@@ -25,6 +25,7 @@ def config() -> ArchConfig:
     return ArchConfig(
         model=model,
         lora=LoRAConfig(r_others=16, r_cut=8),
-        split=SplitConfig(cut_layer=8, cut_buckets=(8, 16, 24, 32)),
+        split=SplitConfig(cut_layer=8, cut_buckets=(8, 16, 24, 32),
+                          smashed_compress="int8"),
         source="hf:mistralai/Mistral-Large-Instruct-2407; unverified",
     )

@@ -26,6 +26,7 @@ def config() -> ArchConfig:
     return ArchConfig(
         model=model,
         lora=LoRAConfig(r_others=16, r_cut=8),
-        split=SplitConfig(cut_layer=6, cut_buckets=(2, 6, 12, 20, 28)),
+        split=SplitConfig(cut_layer=6, cut_buckets=(2, 6, 12, 20, 28),
+                          smashed_compress="int8"),
         source="hf:Qwen/Qwen1.5-0.5B; hf",
     )

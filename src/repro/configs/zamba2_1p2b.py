@@ -30,6 +30,7 @@ def config() -> ArchConfig:
         model=model,
         lora=LoRAConfig(r_others=16, r_cut=8,
                         targets=("q", "k", "v", "o", "ssm_in", "ssm_out")),
-        split=SplitConfig(cut_layer=4, cut_buckets=(2, 4, 8, 12, 19)),
+        split=SplitConfig(cut_layer=4, cut_buckets=(2, 4, 8, 12, 19),
+                          smashed_compress="fp8"),
         source="arXiv:2411.15242; hf",
     )

@@ -2,14 +2,21 @@
 
 Per global round, per client i with cut m_i:
 
-  smashed up     = B * S * d_model * bytes            (f2)
-  smashed down   = B * S * d_model * bytes            (f4, gradients)
-  adapter up     = sum_{l < m_i} r_eff(l) * (d_in+d_out) * bytes   (b1)
+  smashed up     = wire_bytes(B * S tokens of d_model)           (f2)
+  smashed down   = same, for the returned gradient               (f4)
+  adapter up     = sum_{l < m_i} r_eff(l) * (d_in+d_out) * bytes (b1)
   adapter down   = same (b3 broadcast)
 
 r_eff comes from the C2 rank policy, so the saving from r_cut < r_others
-is visible directly here; compression (top-k / int8) multiplies the
-adapter terms by its measured ratio.
+is visible directly here.
+
+The two channels compress independently:
+  * adapters (b1/b3): top-k+EF / int8 in rounds.py; `compress_ratio`
+    multiplies the adapter terms by the caller-measured ratio.
+  * smashed (f2/f4): `smashed_compress` selects a repro.core.smashed
+    compressor and the smashed terms become its MEASURED wire bytes
+    (payload + scale/index side data), not a flat assumed ratio.  The
+    achieved per-client ratio is reported as `smashed_ratio`.
 """
 
 from __future__ import annotations
@@ -19,25 +26,30 @@ from typing import Dict, Sequence
 import numpy as np
 
 from repro.config import ArchConfig
+from repro.core import smashed as smashed_lib
 from repro.models.model import Model
 
 
 def round_comm_bytes(model: Model, *, cuts: Sequence[int], batch_size: int,
                      seq_len: int, dtype_bytes: int = 4,
-                     compress_ratio: float = 1.0) -> Dict[str, np.ndarray]:
+                     compress_ratio: float = 1.0,
+                     smashed_compress: str = "none",
+                     smashed_topk_frac: float = 0.1
+                     ) -> Dict[str, np.ndarray]:
     arch = model.arch
     lora = arch.lora
     m = arch.model
     cuts = np.asarray(cuts, int)
     n = len(cuts)
 
-    smashed = batch_size * seq_len * m.d_model * dtype_bytes
-    smashed_up = np.full(n, smashed, np.float64)
-    smashed_down = np.full(n, smashed, np.float64)
+    dense = float(batch_size * seq_len * m.d_model * dtype_bytes)
+    wire = smashed_lib.wire_bytes(
+        smashed_compress, batch=batch_size, seq=seq_len, d_model=m.d_model,
+        dtype_bytes=dtype_bytes, topk_frac=smashed_topk_frac)
+    smashed_up = np.full(n, wire, np.float64)
+    smashed_down = np.full(n, wire, np.float64)
 
     spec = model.adapter_spec()
-    layer_cost_cut = 0.0
-    layer_cost_other = 0.0
     flat_dims = {}
     for gname, targets in spec.items():
         g = model.group_by_name[gname]
@@ -58,6 +70,8 @@ def round_comm_bytes(model: Model, *, cuts: Sequence[int], batch_size: int,
     return {
         "smashed_up": smashed_up,
         "smashed_down": smashed_down,
+        "smashed_dense": np.full(n, dense, np.float64),
+        "smashed_ratio": np.full(n, dense / wire, np.float64),
         "adapter_up": adapter_up,
         "adapter_down": adapter_down,
         "total": smashed_up + smashed_down + adapter_up + adapter_down,

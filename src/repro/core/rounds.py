@@ -31,7 +31,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ArchConfig
-from repro.core import aggregation, lora as lora_lib, split
+from repro.core import aggregation, lora as lora_lib, smashed as smashed_lib, \
+    split
 from repro.models.common import NO_SHARDING, ShardingPolicy
 from repro.models.model import Model
 from repro.optim import ErrorFeedback, int8_dequantize, int8_quantize, \
@@ -71,6 +72,8 @@ def make_train_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
                     remat: str = "none", ce_chunk: int = 0,
                     agg_every: int = 1, compress: str = "none",
                     topk_frac: float = 0.05, microbatch: int = 1,
+                    smashed_compress: str = "none",
+                    smashed_topk_frac: float = 0.1,
                     jit: bool = True):
     """Build the jitted round step.
 
@@ -82,21 +85,29 @@ def make_train_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
 
     microbatch=A > 1 accumulates gradients over A slices of the per-client
     batch before the optimizer step — activation memory scales 1/A while
-    the gradient buffer stays adapter-sized (LoRA's key memory property)."""
+    the gradient buffer stays adapter-sized (LoRA's key memory property).
+
+    smashed_compress selects the cut-boundary activation compressor
+    (none | int8 | fp8 | topk, see repro.core.smashed): the f2 uplink is
+    compressed in-forward at each client's cut layer and the f4 gradient
+    return symmetrically in-backward via the straight-through VJP."""
     arch = model.arch
     opt = _optimizer_of(arch)
+    smasher = smashed_lib.make_compressor(smashed_compress,
+                                          topk_frac=smashed_topk_frac)
 
     def step(base_params, state, batch, weights, active, lr_c, lr_s):
         cad, sad = state["client_adapters"], state["server_adapters"]
         cuts = state["cuts"]
         wl = weights * active
         wl = wl / jnp.maximum(jnp.sum(wl), 1e-9)
+        boundary = smashed_lib.make_boundary(smasher, cuts)
 
         def loss_fn(cad_, sad_, mb):
             eff = split.merge_adapters(model, cad_, sad_, cuts)
             per_loss, metrics = model.loss(
                 base_params, eff, mb, policy=policy, remat=remat,
-                ce_chunk=ce_chunk, per_client=True)
+                ce_chunk=ce_chunk, per_client=True, boundary=boundary)
             total = jnp.sum(wl * per_loss)
             return total, metrics
 

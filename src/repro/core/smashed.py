@@ -1,0 +1,178 @@
+"""Smashed-activation compression at the cut boundary (paper f2/f4).
+
+The seed only compressed *adapter* traffic (top-k+EF / int8 in rounds.py),
+but comm.py shows the smashed channel — the cut-layer activation going up
+(f2) and its gradient coming down (f4) — is B*S*d_model per client per
+round and dominates the wire budget.  This module compresses that channel:
+
+  none   identity (paper baseline)
+  int8   per-channel symmetric int8, fused Pallas quantize/dequantize
+         (repro.kernels.smashed_quant); ~4x on fp32 activations
+  fp8    fp8-e4m3-style scaled cast, per-message tensor scale; ~4x with
+         wider dynamic range per element than int8, no per-channel state
+  topk   per-token magnitude sparsification along d_model; ratio set by
+         topk_frac (value + 2-byte channel index per kept entry)
+
+Gradient handling: each compressor is wrapped in a straight-through
+estimator (custom_vjp) whose backward applies the SAME compressor to the
+cotangent.  In the merged SplitFT step the cut boundary sits inside one
+jax.value_and_grad, so this makes the f4 gradient return compressed
+symmetrically with the f2 uplink — exactly what a deployed client/server
+pair would put on the wire — while the quantizer itself contributes no
+(zero a.e.) gradient of its own.
+
+Every compressor is shape- and dtype-preserving, so the round engine stays
+one jitted executable for all configurations; which clients actually
+compress is data (the cut mask), not structure.
+
+Wire accounting lives here too (`wire_bytes`), consumed by
+repro.core.comm so `round_comm_bytes` reports measured per-compressor
+smashed-channel bytes instead of assuming the dense payload.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.smashed_quant import ops as quant_ops
+
+COMPRESSORS = ("none", "int8", "fp8", "topk")
+
+FP8_MAX = 448.0          # float8_e4m3fn finite max
+_EPS = 1e-12
+
+
+def straight_through(fn: Callable) -> Callable:
+    """Wrap a shape-preserving compressor so its VJP compresses the
+    cotangent with the same function (symmetric f2/f4 wire simulation)."""
+
+    @jax.custom_vjp
+    def f(x):
+        return fn(x)
+
+    def fwd(x):
+        return fn(x), None
+
+    def bwd(_, g):
+        return (fn(g),)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+# ---------------------------------------------------------------------------
+# compressor functions (x: (..., d); leading axis = message/client when 3D+)
+
+
+def _int8_roundtrip(x):
+    return quant_ops.int8_roundtrip_smashed(x)
+
+
+def _fp8_roundtrip(x):
+    xf = x.astype(jnp.float32)
+    red = tuple(range(1, x.ndim)) if x.ndim >= 3 else \
+        tuple(range(x.ndim))
+    amax = jnp.max(jnp.abs(xf), axis=red, keepdims=True)
+    scale = jnp.maximum(amax, _EPS) / FP8_MAX
+    y = (xf / scale).astype(jnp.float8_e4m3fn).astype(jnp.float32) * scale
+    return y.astype(x.dtype)
+
+
+def _topk_sparsify(x, frac: float):
+    d = x.shape[-1]
+    k = max(1, int(d * frac))
+    av = jnp.abs(x.astype(jnp.float32))
+    kth = jax.lax.top_k(av, k)[0][..., -1:]
+    return jnp.where(av >= kth, x, jnp.zeros((), x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# public interface
+
+
+@dataclasses.dataclass(frozen=True)
+class SmashedCompressor:
+    """A cut-boundary compressor: `apply` is STE-wrapped and preserves
+    shape/dtype; `wire_bytes` is the measured per-message payload."""
+
+    name: str
+    apply: Callable
+    topk_frac: float = 0.1
+
+    def wire_bytes(self, *, batch: int, seq: int, d_model: int,
+                   dtype_bytes: int = 4) -> float:
+        return wire_bytes(self.name, batch=batch, seq=seq, d_model=d_model,
+                          dtype_bytes=dtype_bytes, topk_frac=self.topk_frac)
+
+
+def make_compressor(name: str, *, topk_frac: float = 0.1
+                    ) -> Optional[SmashedCompressor]:
+    """Build a compressor; "none" (and None) -> None so callers can skip
+    the boundary hook entirely for the uncompressed baseline."""
+    name = name or "none"
+    if name == "none":
+        return None
+    if name == "int8":
+        fn = _int8_roundtrip
+    elif name == "fp8":
+        fn = _fp8_roundtrip
+    elif name == "topk":
+        fn = lambda x: _topk_sparsify(x, topk_frac)      # noqa: E731
+    else:
+        raise ValueError(
+            f"unknown smashed compressor {name!r}; known: {COMPRESSORS}")
+    return SmashedCompressor(name=name, apply=straight_through(fn),
+                             topk_frac=topk_frac)
+
+
+def wire_bytes(name: str, *, batch: int, seq: int, d_model: int,
+               dtype_bytes: int = 4, topk_frac: float = 0.1) -> float:
+    """Bytes one smashed message (one direction, one client) puts on the
+    wire: B*S tokens of d_model channels, plus compressor side data."""
+    tokens = batch * seq
+    name = name or "none"
+    if name == "none":
+        return float(tokens * d_model * dtype_bytes)
+    if name == "int8":
+        # int8 payload + one f32 scale per channel per message
+        return float(tokens * d_model + d_model * 4)
+    if name == "fp8":
+        # fp8 payload + one f32 scale per message
+        return float(tokens * d_model + 4)
+    if name == "topk":
+        # kept values at full precision + 2-byte channel index each
+        k = max(1, int(d_model * topk_frac))
+        return float(tokens * k * (dtype_bytes + 2))
+    raise ValueError(
+        f"unknown smashed compressor {name!r}; known: {COMPRESSORS}")
+
+
+def make_boundary(compressor: Optional[SmashedCompressor], cuts):
+    """Boundary hook for Model.run_blocks: compress x only where flat
+    layer `fid` is the last client-side layer (cuts - 1) of that client.
+
+    x carries the client axis first ((N, B, S, d)); cuts is the (N,) cut
+    array, a traced input — so one executable covers every cut
+    configuration, compressed or not, per client."""
+    if compressor is None:
+        return None
+    cut_ids = jnp.asarray(cuts) - 1
+
+    def boundary(x, fid):
+        sel = (cut_ids == fid)
+        mask = sel.reshape((-1,) + (1,) * (x.ndim - 1))
+        # lax.cond so the L-1 non-cut layers skip the compressor entirely
+        # (forward AND backward — cond's VJP only runs the taken branch);
+        # the predicate is a traced scalar, so scan/remat still see one
+        # executable for every cut configuration.
+        return jax.lax.cond(
+            jnp.any(sel),
+            lambda op: jnp.where(mask, compressor.apply(op), op),
+            lambda op: op,
+            x)
+
+    return boundary

@@ -39,8 +39,11 @@ class SystemConfig:
     eval_samples: int = 256
     adjust_every: int = 1          # C3 cadence (rounds)
     agg_every: int = 1             # FedAvg cadence (rounds)
-    compress: str = "none"         # none | topk | int8
+    compress: str = "none"         # adapter channel: none | topk | int8
     topk_frac: float = 0.05
+    smashed_compress: Optional[str] = None   # f2/f4 channel: none | int8 |
+                                             # fp8 | topk; None -> arch.split
+    smashed_topk_frac: Optional[float] = None
     straggler_sim: bool = False
     deadline_frac: float = 1.5
     checkpoint_dir: Optional[str] = None
@@ -89,10 +92,18 @@ class SplitFTSystem:
         self.state = rounds.init_state(self.model, k_state, num_clients=n)
         if self.sys.compress == "topk":
             self.state = rounds.with_error_feedback(self.state)
+        self.smashed_compress = (arch.split.smashed_compress
+                                 if self.sys.smashed_compress is None
+                                 else self.sys.smashed_compress)
+        self.smashed_topk_frac = (arch.split.smashed_topk_frac
+                                  if self.sys.smashed_topk_frac is None
+                                  else self.sys.smashed_topk_frac)
         self.train_step = rounds.make_train_step(
             self.model, policy=policy, remat=arch.train.remat,
             agg_every=self.sys.agg_every, compress=self.sys.compress,
-            topk_frac=self.sys.topk_frac, jit=jit)
+            topk_frac=self.sys.topk_frac,
+            smashed_compress=self.smashed_compress,
+            smashed_topk_frac=self.smashed_topk_frac, jit=jit)
         self.eval_step = rounds.make_eval_step(self.model, policy=policy,
                                                jit=jit)
 
@@ -143,7 +154,9 @@ class SplitFTSystem:
                 cb = comm.round_comm_bytes(
                     self.model, cuts=cuts_np,
                     batch_size=arch.train.batch_size,
-                    seq_len=arch.train.seq_len)
+                    seq_len=arch.train.seq_len,
+                    smashed_compress=self.smashed_compress,
+                    smashed_topk_frac=self.smashed_topk_frac)
                 flops_layer = 12 * arch.model.d_model ** 2 \
                     * arch.train.batch_size * arch.train.seq_len
                 times = self.speed.round_times(
@@ -169,10 +182,15 @@ class SplitFTSystem:
             }
             if times is not None:
                 rec["round_time_sim"] = times
-            rec["comm"] = comm.round_comm_bytes(
+            cb_rec = comm.round_comm_bytes(
                 self.model, cuts=np.asarray(self.state["cuts"]),
                 batch_size=arch.train.batch_size,
-                seq_len=arch.train.seq_len)["total"]
+                seq_len=arch.train.seq_len,
+                smashed_compress=self.smashed_compress,
+                smashed_topk_frac=self.smashed_topk_frac)
+            rec["comm"] = cb_rec["total"]
+            rec["comm_smashed"] = cb_rec["smashed_up"] + cb_rec["smashed_down"]
+            rec["smashed_ratio"] = cb_rec["smashed_ratio"]
 
             # C3: evaluate global model per client, adjust cuts + weights
             if self._adaptive and (r + 1) % self.sys.adjust_every == 0:

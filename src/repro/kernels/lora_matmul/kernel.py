@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pltpu_compat import compiler_params
+
 
 DEFAULT_BM = 256
 DEFAULT_BN = 256
@@ -99,7 +101,7 @@ def lora_matmul_pallas(x, w, a, b, scale, *, bm: int = DEFAULT_BM,
             pltpu.VMEM((bm, bn), jnp.float32),   # acc
             pltpu.VMEM((bm, r), jnp.float32),    # xa
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,

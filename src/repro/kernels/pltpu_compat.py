@@ -1,0 +1,18 @@
+"""Version compatibility for the Pallas TPU surface.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; the
+pinned CI lane (and some dev machines) sit on either side of the rename.
+Every kernel imports ``compiler_params(...)`` from here instead of touching
+the class directly.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
+
+def compiler_params(**kwargs):
+    return _CompilerParams(**kwargs)

@@ -1,0 +1,9 @@
+"""Fused per-channel int8 quantize/dequantize for the smashed-activation
+channel (SplitFT f2 uplink / f4 gradient downlink)."""
+
+from repro.kernels.smashed_quant.ops import (int8_dequantize_smashed,
+                                             int8_quantize_smashed,
+                                             int8_roundtrip_smashed)
+
+__all__ = ["int8_quantize_smashed", "int8_dequantize_smashed",
+           "int8_roundtrip_smashed"]

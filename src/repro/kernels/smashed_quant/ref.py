@@ -1,0 +1,40 @@
+"""jnp oracle for smashed-activation int8 quantization.
+
+Semantics (shared with the Pallas kernels):
+
+  x: (G, M, d)  — G independent messages (one per client), M tokens,
+                  d model channels.
+  quantize:   scale[g, c] = max_m |x[g, m, c]| / 127   (per-channel, per
+              message); q = clip(round(x / scale), -127, 127) int8.
+  dequantize: x_hat = q * scale, cast back to the activation dtype.
+
+Per-channel beats per-tensor here because cut-layer activations have a
+strongly channel-dependent dynamic range (residual-stream outliers): a
+single tensor scale lets a handful of hot channels wash out the rest.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-12
+
+
+def quantize(x):
+    """x (G, M, d) -> (q (G, M, d) int8, scale (G, d) float32)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-2)                    # (G, d)
+    scale = jnp.maximum(amax, EPS) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None, :]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize(q, scale, dtype=jnp.float32):
+    """(q (G, M, d) int8, scale (G, d)) -> x_hat (G, M, d) in `dtype`."""
+    return (q.astype(jnp.float32) * scale[..., None, :]).astype(dtype)
+
+
+def roundtrip(x):
+    """Wire round trip: dequantize(quantize(x)) in x.dtype."""
+    q, scale = quantize(x)
+    return dequantize(q, scale, x.dtype)

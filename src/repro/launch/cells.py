@@ -131,9 +131,11 @@ def build_train_cell(arch: ArchConfig, shape: ShapeConfig, mesh,
     w_abs = jax.ShapeDtypeStruct((n,), jnp.float32)
     lr_abs = jax.ShapeDtypeStruct((), jnp.float32)
 
-    step = rounds.make_train_step(model, policy=policy, remat=remat,
-                                  ce_chunk=ce_chunk, microbatch=microbatch,
-                                  jit=False)
+    step = rounds.make_train_step(
+        model, policy=policy, remat=remat, ce_chunk=ce_chunk,
+        microbatch=microbatch,
+        smashed_compress=arch.split.smashed_compress,
+        smashed_topk_frac=arch.split.smashed_topk_frac, jit=False)
 
     base_specs = shard_rules.param_specs(base_abs, mesh)
     state_specs = _state_specs(state_abs, mesh)

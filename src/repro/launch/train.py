@@ -36,7 +36,13 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true",
                     help="smoke-scale config (CI)")
     ap.add_argument("--compress", default="none",
-                    choices=["none", "topk", "int8"])
+                    choices=["none", "topk", "int8"],
+                    help="adapter-sync (b1/b3) channel compressor")
+    ap.add_argument("--smashed-compress", default=None,
+                    choices=["none", "int8", "fp8", "topk"],
+                    help="smashed-activation (f2/f4) channel compressor; "
+                         "default: the arch config's choice")
+    ap.add_argument("--smashed-topk-frac", type=float, default=None)
     ap.add_argument("--straggler-sim", action="store_true")
     ap.add_argument("--samples", type=int, default=2000)
     ap.add_argument("--out", default="runs/train")
@@ -74,6 +80,8 @@ def main(argv=None):
     os.makedirs(args.out, exist_ok=True)
     sys_cfg = SystemConfig(
         num_samples=args.samples, compress=args.compress,
+        smashed_compress=args.smashed_compress,
+        smashed_topk_frac=args.smashed_topk_frac,
         straggler_sim=args.straggler_sim,
         checkpoint_dir=os.path.join(args.out, "ckpt"),
         checkpoint_every=max(args.rounds // 5, 1))

@@ -297,12 +297,18 @@ class Model:
                    policy: ShardingPolicy = NO_SHARDING, mode: str = "train",
                    remat: str = "none", cache: Optional[Params] = None,
                    memory=None, layer_lo: int = 0,
-                   layer_hi: Optional[int] = None):
+                   layer_hi: Optional[int] = None, boundary=None):
         """Run flat layers [layer_lo, layer_hi) over activations x.
 
         Returns (x, aux_total, new_cache).  `cache` is the model-level cache
         pytree (or None); `memory` the encoder output for cross-attention
-        groups."""
+        groups.
+
+        `boundary(x, flat_id) -> x` is applied to every layer output with
+        its flat layer id (traced inside scans).  The SplitFT round engine
+        uses it to compress the smashed activation exactly where each
+        client's cut sits — since the id is data, the hook keeps the
+        single-executable property of the mask-based split."""
         cfg = self.cfg
         hi_total = self.num_flat_layers if layer_hi is None else layer_hi
         aux_total = jnp.float32(0.0)
@@ -332,7 +338,8 @@ class Model:
             x, aux_total, new_cache = self._run_group(
                 g, params, adapters, x, glo, ghi, policy=policy, mode=mode,
                 remat=remat, cache=new_cache, cache_len=cache_len, rope=rope,
-                memory=memory, aux_total=aux_total)
+                memory=memory, aux_total=aux_total, flat_lo=a,
+                boundary=boundary)
         if new_cache is not None and mode == "decode":
             new_cache["len"] = cache_len + 1
         elif new_cache is not None and mode == "prefill":
@@ -341,7 +348,7 @@ class Model:
 
     def _run_group(self, g: GroupSpec, params, adapters, x, lo, hi, *,
                    policy, mode, remat, cache, cache_len, rope, memory,
-                   aux_total):
+                   aux_total, flat_lo: int = 0, boundary=None):
         p_g = params[g.name]
         ad_g = adapters.get(g.name) if adapters else None
         cache_g = cache.get(g.name) if cache else None
@@ -388,9 +395,11 @@ class Model:
 
             def scan_body(carry, xs):
                 xc, aux = carry
-                p_l, ad_l, c_l = xs
+                p_l, ad_l, c_l, fid = xs
                 self_c, mem_c = split_layer_cache(c_l)
                 xc, a, c_new, m_new = body(xc, p_l, ad_l, self_c, mem_c)
+                if boundary is not None:
+                    xc = boundary(xc, fid)
                 ys = None
                 if c_l is not None:
                     if g.kind != "ssm":
@@ -406,7 +415,8 @@ class Model:
             (x, aux_total), new_c = jax.lax.scan(
                 scan_body, (x, aux_total),
                 (slice_tree(p_g, lo, hi), slice_tree(ad_g, lo, hi),
-                 slice_tree(cache_g, lo, hi)))
+                 slice_tree(cache_g, lo, hi),
+                 jnp.arange(flat_lo, flat_lo + (hi - lo))))
             if cache_g is not None:
                 cache = dict(cache)
                 merged = dict(cache_g)
@@ -429,6 +439,8 @@ class Model:
             if mode == "train":
                 body = self._maybe_remat(body, remat)
             x, a, c_new, m_new = body(x, p_l, ad_l, self_c, mem_c)
+            if boundary is not None:
+                x = boundary(x, flat_lo + (i - lo))
             aux_total = aux_total + a
             if new_cache_g is not None and c_new is not None:
                 if g.kind != "ssm":
@@ -448,7 +460,7 @@ class Model:
     # -- encoder (whisper) -----------------------------------------------------
 
     def encode(self, params: Params, adapters, frames, *, policy=NO_SHARDING,
-               remat: str = "none"):
+               remat: str = "none", boundary=None):
         """frames ([N,]B, S_enc, d) stub embeddings -> encoder output."""
         cfg = self.cfg
         x = frames + params["embed"]["enc_pos"].astype(frames.dtype)
@@ -457,14 +469,15 @@ class Model:
         n_enc = g.size
         x, aux, _ = self.run_blocks(params, adapters, x, policy=policy,
                                     mode="train", remat=remat,
-                                    layer_lo=0, layer_hi=n_enc)
+                                    layer_lo=0, layer_hi=n_enc,
+                                    boundary=boundary)
         return apply_norm(params["enc_norm"], x, kind=cfg.norm,
                           eps=cfg.norm_eps)
 
     # -- top-level entry points ------------------------------------------------
 
     def forward(self, params, adapters, batch, *, policy=NO_SHARDING,
-                remat="none", cache=None, mode="train"):
+                remat="none", cache=None, mode="train", boundary=None):
         """Full forward to hidden states (pre-head).
 
         batch: {"tokens": ([N,]B,S)[, "prefix": ([N,]B,P,d)]
@@ -478,7 +491,8 @@ class Model:
                 memory = None   # cross K/V come from the cache
             else:
                 memory = self.encode(params, adapters, batch["frames"],
-                                     policy=policy, remat=remat)
+                                     policy=policy, remat=remat,
+                                     boundary=boundary)
             lo = self.group_by_name["enc"].size
         positions = (cache["len"][..., None] if mode == "decode"
                      else jnp.arange(tokens.shape[-1]))
@@ -486,20 +500,23 @@ class Model:
                        prefix=batch.get("prefix"), policy=policy)
         x, aux, new_cache = self.run_blocks(
             params, adapters, x, policy=policy, mode=mode, remat=remat,
-            cache=cache, memory=memory, layer_lo=lo)
+            cache=cache, memory=memory, layer_lo=lo, boundary=boundary)
         x = apply_norm(params["final_norm"], x, kind=cfg.norm,
                        eps=cfg.norm_eps)
         return x, aux, new_cache
 
     def loss(self, params, adapters, batch, *, policy=NO_SHARDING,
-             remat="none", ce_chunk: int = 0, per_client: bool = False):
+             remat="none", ce_chunk: int = 0, per_client: bool = False,
+             boundary=None):
         """Next-token CE.  batch needs "tokens", "labels"[, "loss_mask"].
 
         per_client=True keeps the leading client axis un-reduced: returns
         ((N,) nll, metrics with (N,) entries) — the SplitFT round engine
-        weights and combines them (paper formula 2)."""
+        weights and combines them (paper formula 2).  `boundary` is the
+        cut-layer hook (see run_blocks) used for smashed compression."""
         x, aux, _ = self.forward(params, adapters, batch, policy=policy,
-                                 remat=remat, mode="train")
+                                 remat=remat, mode="train",
+                                 boundary=boundary)
         labels = batch["labels"]
         mask = batch.get("loss_mask")
         if mask is None:

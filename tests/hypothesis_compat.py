@@ -1,0 +1,45 @@
+"""Optional-hypothesis shim.
+
+Property tests use hypothesis when it is installed; on a bare interpreter
+(the tier-1 CI lane installs only jax[cpu] + pytest) the `given` decorator
+below replaces each property test with a skip, so collection never fails.
+
+Usage (instead of importing from hypothesis directly):
+
+    from hypothesis_compat import given, settings, st
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:        # pragma: no cover - exercised in CI lane
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """Accepts any strategy construction (st.integers(...), st.lists(
+        st.floats(), ...)) and returns another stub so module-level strategy
+        expressions still evaluate."""
+
+        def __call__(self, *args, **kwargs):
+            return _StrategyStub()
+
+        def __getattr__(self, name):
+            return _StrategyStub()
+
+    st = _StrategyStub()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def skipped():
+                pytest.skip("hypothesis not installed")
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn

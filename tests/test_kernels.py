@@ -7,11 +7,19 @@ import os
 import numpy as np
 import pytest
 
-os.environ["REPRO_PALLAS_INTERPRET"] = "1"   # before kernel imports
+
+@pytest.fixture(autouse=True)
+def _interpret_mode(monkeypatch):
+    """Route kernel dispatch through Pallas interpret mode for THIS module
+    only.  A module-level os.environ write would leak into every test module
+    collected after this one (collection imports all modules first) and force
+    unrelated tests onto the Pallas path."""
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+
 
 import jax                                     # noqa: E402
 import jax.numpy as jnp                        # noqa: E402
-from hypothesis import given, settings, strategies as st   # noqa: E402
+from hypothesis_compat import given, settings, st   # noqa: E402
 
 from repro.kernels.decode_attention import ops as dec_ops   # noqa: E402
 from repro.kernels.decode_attention import ref as dec_ref   # noqa: E402

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.optim import (ErrorFeedback, adamw, int8_dequantize,
                          int8_quantize, make_optimizer, make_schedule, sgd,
