@@ -30,6 +30,7 @@ BENCHES = [
     "bench_models",         # Fig 4
     "bench_compression",    # beyond paper (adapter channel)
     "bench_smashed",        # beyond paper (smashed f2/f4 channel)
+    "bench_scheduler",      # beyond paper (round schedulers, time-to-loss)
     "bench_roofline",       # §Roofline summary
 ]
 

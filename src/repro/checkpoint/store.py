@@ -50,18 +50,22 @@ def save_checkpoint(path: str, tree, *, metadata: Optional[Dict] = None):
     os.replace(mtmp, f"{path}.meta")
 
 
+def _read_meta(path: str) -> Dict:
+    """Metadata sidecar of checkpoint `path` ({} if absent/unreadable)."""
+    meta_path = f"{path}.meta"
+    if not os.path.exists(meta_path):
+        return {}
+    with open(meta_path, "rb") as f:
+        return msgpack.unpackb(f.read(), raw=False).get("metadata", {})
+
+
 def load_checkpoint(path: str, like) -> Tuple[Any, Dict]:
     """Load into the structure of `like` (shape donor pytree)."""
     with np.load(path) as z:
         leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
     _, treedef = jax.tree.flatten(like)
     tree = jax.tree.unflatten(treedef, leaves)
-    meta: Dict = {}
-    meta_path = f"{path}.meta"
-    if os.path.exists(meta_path):
-        with open(meta_path, "rb") as f:
-            meta = msgpack.unpackb(f.read(), raw=False).get("metadata", {})
-    return tree, meta
+    return tree, _read_meta(path)
 
 
 class CheckpointManager:
@@ -101,6 +105,15 @@ class CheckpointManager:
             except Exception:
                 continue
         return None
+
+    def metadata(self, step: int) -> Optional[Dict]:
+        """Just the metadata sidecar of one checkpoint (no array load) —
+        lets callers diagnose a template mismatch the restore path can
+        only report as 'nothing loadable'."""
+        try:
+            return _read_meta(self._path(step))
+        except Exception:
+            return None
 
     def _gc(self):
         steps = self.steps()

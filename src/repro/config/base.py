@@ -243,6 +243,12 @@ class SplitConfig:
     # deployments of the large assigned archs default to int8.
     smashed_compress: str = "none"
     smashed_topk_frac: float = 0.1      # kept fraction for the topk scheme
+    # Round scheduler (repro.core.scheduler): sync (paper Algorithm 1) |
+    # deadline (straggler drop) | local_steps (speed-proportional K_i).
+    # SystemConfig.scheduler overrides per run.
+    scheduler: str = "sync"
+    max_local_steps: int = 4            # static K cap for local_steps
+    deadline_frac: float = 1.5          # drop threshold for deadline
 
     def buckets(self, num_layers: int) -> Tuple[int, ...]:
         if self.cut_buckets:

@@ -3,11 +3,18 @@
 Aggregation for (group g, target t, layer l):
 
     agg[l] = sum_i mu_i(l) * X[i, l] / sum_i mu_i(l)
-    mu_i(l) = w_i * active_i * client_mask_i(l)
+    mu_i(l) = w_i * active_i * client_mask_i(l) / steps_i
 
 i.e. only clients that (a) are active this round (straggler/elastic
 survivors) and (b) actually own layer l contribute.  Layers owned by no
 active client keep their previous value.
+
+`steps_i` (optional; all-ones for the sync/deadline schedulers) is the
+client's effective local-step count under the local_steps scheduler.  A
+client that ran K local steps has drifted ~K times further from the round
+start, so its weight is divided by K before renormalization — FedNova-
+style objective-consistency normalization, composed multiplicatively with
+the paper's C3 x |D_i| weights.
 
 After aggregation every client's row is refreshed: owned layers get the
 aggregate (paper b3); dormant rows mirror the server adapters so that a
@@ -33,11 +40,16 @@ Params = Dict[str, Any]
 
 
 def fedavg(model: Model, client_adapters: Params, cuts, weights,
-           active) -> Params:
-    """Aggregate: returns the rank-2 (per-layer, no client axis) tree."""
+           active, steps=None) -> Params:
+    """Aggregate: returns the rank-2 (per-layer, no client axis) tree.
+
+    steps: optional (N,) effective local-step counts; weights are divided
+    by them (step-count normalization, see module docstring)."""
     masks = client_layer_masks(model.num_flat_layers, cuts)     # (N, M)
     w = (jnp.asarray(weights, jnp.float32)
          * jnp.asarray(active, jnp.float32))
+    if steps is not None:
+        w = w / jnp.maximum(jnp.asarray(steps, jnp.float32), 1.0)
 
     out: Params = {}
     for gname, targets in client_adapters.items():

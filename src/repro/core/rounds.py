@@ -11,12 +11,22 @@ One `train_step` call = one global round (f1-f5 + b1-b4):
                                                exactly the paper's
                                                gradients to each side
   b1-b3  FedAvg of client adapters (weighted, masked, survivor-aware,
-         optionally top-k+EF or int8 compressed)
+         step-normalized, optionally top-k+EF or int8 compressed)
   b4     dormant rows re-synced to the server adapters
 
-Heterogeneous per-client cuts, rank policy, adaptive movement and elastic
-membership are all *data* (mask arrays) — one executable covers every
-configuration (DESIGN.md §3).
+The engine is *policy-free*: which clients participate and how many local
+steps each runs per round comes from a RoundScheduler
+(repro.core.scheduler) as data — the `active` mask and the
+state["step_budgets"] array.  With `max_local_steps > 1` the f/b phases
+become a lax.scan over the inner steps with per-client active masks
+(client i runs budgets[i] steps; its adapter rows, optimizer slots and EF
+residuals freeze for k >= budgets[i]), while FedAvg stays at the round
+boundary.  max_local_steps == 1 is exactly the pre-scheduler lockstep
+step, bit-for-bit.
+
+Heterogeneous per-client cuts, rank policy, adaptive movement, elastic
+membership and step budgets are all *data* (mask arrays) — one executable
+covers every configuration (DESIGN.md §3).
 
 Base parameters stay frozen (LoRA fine-tuning): they are an input, never
 an output, so the optimizer holds state only for adapters.
@@ -74,6 +84,7 @@ def make_train_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
                     topk_frac: float = 0.05, microbatch: int = 1,
                     smashed_compress: str = "none",
                     smashed_topk_frac: float = 0.1,
+                    max_local_steps: int = 1,
                     jit: bool = True):
     """Build the jitted round step.
 
@@ -90,18 +101,47 @@ def make_train_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
     smashed_compress selects the cut-boundary activation compressor
     (none | int8 | fp8 | topk, see repro.core.smashed): the f2 uplink is
     compressed in-forward at each client's cut layer and the f4 gradient
-    return symmetrically in-backward via the straight-through VJP."""
+    return symmetrically in-backward via the straight-through VJP.  If the
+    state carries a "smashed_ef" residual (with_smashed_ef), the topk
+    compressor runs with error feedback.
+
+    max_local_steps=K > 1 selects the local-steps engine: batch gains a
+    leading (K,) step axis, state must carry "step_budgets" (N,) int32
+    (with_step_budgets; written by the local_steps scheduler each round),
+    and the step runs a lax.scan over K inner steps.  Client i's adapters,
+    optimizer slots and EF residual advance only for inner steps
+    k < budgets[i]; the server side advances while any client is active.
+    FedAvg happens once, at the round boundary, with weights divided by
+    each client's effective step count (aggregation.fedavg `steps`) so
+    extra local steps do not bias the global adapter.  K == 1 is exactly
+    the pre-scheduler lockstep path."""
     arch = model.arch
     opt = _optimizer_of(arch)
     smasher = smashed_lib.make_compressor(smashed_compress,
                                           topk_frac=smashed_topk_frac)
+    if max_local_steps < 1:
+        raise ValueError(f"max_local_steps must be >= 1, got "
+                         f"{max_local_steps}")
+    if max_local_steps > 1 and microbatch > 1:
+        raise ValueError("the local-steps engine does not compose with "
+                         "microbatch accumulation yet")
+
+    if max_local_steps > 1:
+        return _make_local_steps_step(
+            model, opt, smasher, policy=policy, remat=remat,
+            ce_chunk=ce_chunk, agg_every=agg_every, compress=compress,
+            topk_frac=topk_frac, max_local_steps=max_local_steps, jit=jit)
 
     def step(base_params, state, batch, weights, active, lr_c, lr_s):
         cad, sad = state["client_adapters"], state["server_adapters"]
         cuts = state["cuts"]
+        sm_ef = state.get("smashed_ef")
+        if sm_ef is not None and microbatch > 1:
+            raise ValueError("smashed error feedback does not compose "
+                             "with microbatch accumulation")
         wl = weights * active
         wl = wl / jnp.maximum(jnp.sum(wl), 1e-9)
-        boundary = smashed_lib.make_boundary(smasher, cuts)
+        boundary = smashed_lib.make_boundary(smasher, cuts, residual=sm_ef)
 
         def loss_fn(cad_, sad_, mb):
             eff = split.merge_adapters(model, cad_, sad_, cuts)
@@ -149,41 +189,22 @@ def make_train_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
         else:
             (total, metrics), (g_cad, g_sad) = grad_fn(cad, sad, batch)
 
+        metrics = dict(metrics)
+        new_sm_ef = metrics.pop("smashed_ef", None)
+        if new_sm_ef is not None:
+            # inactive (deadline-dropped / elastic) clients transmitted
+            # nothing: their accumulated residual must survive the round
+            m = active.reshape((-1,) + (1,) * (new_sm_ef.ndim - 1)) > 0
+            new_sm_ef = jnp.where(m, new_sm_ef, state["smashed_ef"])
+
         new_cad, opt_c = opt.update(g_cad, state["opt_c"], cad, lr_c)
         new_sad, opt_s = opt.update(g_sad, state["opt_s"], sad, lr_s)
 
-        # -- b1-b3: aggregate client adapters -------------------------------
-        def do_agg(operand):
-            cad_in, ef_in = operand
-            cad_for_agg = cad_in
-            ef_out = ef_in
-            if compress == "topk":
-                delta = aggregation.adapter_delta(cad_in, cad)
-                dense, ef_out, _ = ErrorFeedback.apply(delta, ef_in,
-                                                       topk_frac)
-                cad_for_agg = aggregation.apply_delta(cad, dense)
-            elif compress == "int8":
-                delta = aggregation.adapter_delta(cad_in, cad)
-                deq = int8_dequantize(int8_quantize(delta))
-                deq = jax.tree.map(lambda d, ref: d.astype(ref.dtype),
-                                   deq, delta)
-                cad_for_agg = aggregation.apply_delta(cad, deq)
-            agg = aggregation.fedavg(model, cad_for_agg, cuts, weights,
-                                     active)
-            out = aggregation.broadcast_after_agg(model, cad_for_agg, agg,
-                                                  new_sad, cuts)
-            return out, ef_out
-
-        def no_agg(operand):
-            return operand
-
-        ef = state.get("ef")
-        if agg_every <= 1:
-            new_cad, ef = do_agg((new_cad, ef))
-        else:
-            new_cad, ef = jax.lax.cond(
-                (state["round"] + 1) % agg_every == 0,
-                do_agg, no_agg, (new_cad, ef))
+        new_cad, ef = _round_aggregate(
+            model, compress=compress, topk_frac=topk_frac,
+            agg_every=agg_every, cad_start=cad, new_cad=new_cad,
+            new_sad=new_sad, cuts=cuts, weights=weights, active=active,
+            ef=state.get("ef"), round_idx=state["round"])
 
         new_state = dict(state)
         new_state.update(client_adapters=new_cad, server_adapters=new_sad,
@@ -191,8 +212,174 @@ def make_train_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
                          round=state["round"] + 1)
         if ef is not None:
             new_state["ef"] = ef
-        metrics = dict(metrics)
+        if new_sm_ef is not None:
+            new_state["smashed_ef"] = new_sm_ef
         metrics["total"] = total
+        return new_state, metrics
+
+    if jit:
+        return jax.jit(step, donate_argnums=(1,))
+    return step
+
+
+def _round_aggregate(model: Model, *, compress, topk_frac, agg_every,
+                     cad_start, new_cad, new_sad, cuts, weights, active,
+                     ef, round_idx, steps=None):
+    """b1-b3 at the round boundary, shared by both engines: optional
+    adapter-delta compression (top-k+EF / int8), survivor- and
+    step-normalized FedAvg, then the b3/b4 broadcast.  Returns
+    (client_adapters', ef')."""
+
+    def do_agg(operand):
+        cad_in, ef_in = operand
+        cad_for_agg = cad_in
+        ef_out = ef_in
+        if compress == "topk":
+            delta = aggregation.adapter_delta(cad_in, cad_start)
+            dense, ef_out, _ = ErrorFeedback.apply(delta, ef_in,
+                                                   topk_frac)
+            cad_for_agg = aggregation.apply_delta(cad_start, dense)
+        elif compress == "int8":
+            delta = aggregation.adapter_delta(cad_in, cad_start)
+            deq = int8_dequantize(int8_quantize(delta))
+            deq = jax.tree.map(lambda d, ref: d.astype(ref.dtype),
+                               deq, delta)
+            cad_for_agg = aggregation.apply_delta(cad_start, deq)
+        agg = aggregation.fedavg(model, cad_for_agg, cuts, weights,
+                                 active, steps=steps)
+        out = aggregation.broadcast_after_agg(model, cad_for_agg, agg,
+                                              new_sad, cuts)
+        return out, ef_out
+
+    def no_agg(operand):
+        return operand
+
+    if agg_every <= 1:
+        return do_agg((new_cad, ef))
+    return jax.lax.cond((round_idx + 1) % agg_every == 0,
+                        do_agg, no_agg, (new_cad, ef))
+
+
+# ---------------------------------------------------------------------------
+# local-steps engine (scheduler == "local_steps")
+
+
+def _select_clients(step_act, new_tree, old_tree):
+    """Per-leaf `where` keeping old values for clients inactive this inner
+    step.  Client axis is axis 1 for stacked leaves ((Lg, N, ...)); scalar
+    leaves (the optimizer step count) advance while anyone is active."""
+    any_act = jnp.any(step_act > 0)
+
+    def sel(n, o):
+        if n.ndim == 0:
+            return jnp.where(any_act, n, o)
+        if n.ndim == 1:
+            return jnp.where(step_act > 0, n, o)
+        m = step_act.reshape((1, -1) + (1,) * (n.ndim - 2)) > 0
+        return jnp.where(m, n, o)
+
+    return jax.tree.map(sel, new_tree, old_tree)
+
+
+def _select_any(step_act, new_tree, old_tree):
+    """Whole-tree `where`: advance only while any client is active."""
+    any_act = jnp.any(step_act > 0)
+    return jax.tree.map(lambda n, o: jnp.where(any_act, n, o),
+                        new_tree, old_tree)
+
+
+def _make_local_steps_step(model: Model, opt, smasher, *, policy, remat,
+                           ce_chunk, agg_every, compress, topk_frac,
+                           max_local_steps: int, jit: bool):
+    """The K-inner-step engine (see make_train_step docstring).
+
+    batch leaves carry a leading (K,) step axis; state carries
+    "step_budgets".  One lax.scan body = one local step on every client
+    simultaneously (the SPMD client axis), masked so client i freezes
+    after budgets[i] steps.  Reported metrics are the FIRST inner step's
+    (the round-start loss), keeping loss curves comparable across
+    schedulers."""
+    K = max_local_steps
+
+    def step(base_params, state, batch, weights, active, lr_c, lr_s):
+        cad, sad = state["client_adapters"], state["server_adapters"]
+        cuts = state["cuts"]
+        budgets = state["step_budgets"]
+        sm_ef = state.get("smashed_ef")
+        has_ef = sm_ef is not None
+
+        def inner(carry, xs):
+            mb, k = xs
+            if has_ef:
+                cad_c, sad_c, opt_c, opt_s, ef_c = carry
+            else:
+                cad_c, sad_c, opt_c, opt_s = carry
+                ef_c = None
+            step_act = active * (k < budgets).astype(active.dtype)
+            wl = weights * step_act
+            wl = wl / jnp.maximum(jnp.sum(wl), 1e-9)
+            boundary = smashed_lib.make_boundary(smasher, cuts,
+                                                 residual=ef_c)
+
+            def loss_fn(cad_, sad_):
+                eff = split.merge_adapters(model, cad_, sad_, cuts)
+                per_loss, metrics = model.loss(
+                    base_params, eff, mb, policy=policy, remat=remat,
+                    ce_chunk=ce_chunk, per_client=True, boundary=boundary)
+                total = jnp.sum(wl * per_loss)
+                return total, metrics
+
+            (total, metrics), (g_cad, g_sad) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1), has_aux=True)(cad_c, sad_c)
+            metrics = dict(metrics)
+            new_ef = metrics.pop("smashed_ef", None)
+
+            new_cad, new_opt_c = opt.update(g_cad, opt_c, cad_c, lr_c)
+            new_cad = _select_clients(step_act, new_cad, cad_c)
+            new_opt_c = _select_clients(step_act, new_opt_c, opt_c)
+            new_sad, new_opt_s = opt.update(g_sad, opt_s, sad_c, lr_s)
+            new_sad = _select_any(step_act, new_sad, sad_c)
+            new_opt_s = _select_any(step_act, new_opt_s, opt_s)
+            out = (new_cad, new_sad, new_opt_c, new_opt_s)
+            if has_ef:
+                # residual carries the client axis FIRST ((N, B, S, d))
+                m = step_act.reshape((-1,) + (1,) * (new_ef.ndim - 1)) > 0
+                new_ef = jnp.where(m, new_ef, ef_c)
+                out = out + (new_ef,)
+            metrics["total"] = total
+            return out, metrics
+
+        carry0 = (cad, sad, state["opt_c"], state["opt_s"])
+        if has_ef:
+            carry0 = carry0 + (sm_ef,)
+        ks = jnp.arange(K)
+        carry, stacked = jax.lax.scan(inner, carry0, (batch, ks))
+        if has_ef:
+            new_cad, new_sad, opt_c, opt_s, new_sm_ef = carry
+        else:
+            new_cad, new_sad, opt_c, opt_s = carry
+            new_sm_ef = None
+        # round metrics = first inner step (round-start loss; every active
+        # client runs step 0, so it is comparable across schedulers)
+        metrics = jax.tree.map(lambda m: m[0], stacked)
+
+        # -- b1-b3: aggregate at the round boundary, step-normalized ------
+        eff_steps = jnp.clip(budgets.astype(jnp.float32), 1.0, float(K))
+        new_cad, ef = _round_aggregate(
+            model, compress=compress, topk_frac=topk_frac,
+            agg_every=agg_every, cad_start=cad, new_cad=new_cad,
+            new_sad=new_sad, cuts=cuts, weights=weights, active=active,
+            ef=state.get("ef"), round_idx=state["round"],
+            steps=eff_steps)
+
+        new_state = dict(state)
+        new_state.update(client_adapters=new_cad, server_adapters=new_sad,
+                         opt_c=opt_c, opt_s=opt_s,
+                         round=state["round"] + 1)
+        if ef is not None:
+            new_state["ef"] = ef
+        if new_sm_ef is not None:
+            new_state["smashed_ef"] = new_sm_ef
         return new_state, metrics
 
     if jit:
@@ -222,4 +409,26 @@ def with_error_feedback(state: Params) -> Params:
     """Attach zeroed EF residuals (needed before compress='topk')."""
     state = dict(state)
     state["ef"] = ErrorFeedback.init(state["client_adapters"])
+    return state
+
+
+def with_step_budgets(state: Params) -> Params:
+    """Attach the per-client local-step budget array (needed before the
+    max_local_steps > 1 engine).  The scheduler overwrites it each round;
+    it lives in state so checkpoints round-trip it."""
+    state = dict(state)
+    n = state["cuts"].shape[0]
+    state["step_budgets"] = jnp.ones((n,), jnp.int32)
+    return state
+
+
+def with_smashed_ef(state: Params, model: Model) -> Params:
+    """Attach the zeroed smashed-channel EF residual ((N, B, S, d_model),
+    needed before smashed_compress='topk' with error feedback)."""
+    state = dict(state)
+    t = model.arch.train
+    n = state["cuts"].shape[0]
+    state["smashed_ef"] = jnp.zeros(
+        (n, t.batch_size, t.seq_len, model.arch.model.d_model),
+        jnp.float32)
     return state

@@ -1,0 +1,151 @@
+"""Round schedulers: who participates in a round, and how much work each
+client does before the FedAvg barrier.
+
+The round *engine* (rounds.make_train_step) is one jitted executable whose
+behaviour is controlled by data — survivor masks, per-client step budgets.
+A `RoundScheduler` is the host-side policy that produces that data each
+round, plus the simulated wall-clock accounting the benchmarks report:
+
+  sync         paper Algorithm 1: every client runs exactly one step and
+               the round barrier waits for the slowest client.  Default;
+               bit-identical to the pre-scheduler engine.
+  deadline     straggler drop (previously inlined in SplitFTSystem.run):
+               clients that would exceed deadline_frac x median round time
+               are excluded from this round's step and FedAvg; fast
+               clients still idle until the last *survivor* finishes.
+  local_steps  speed-proportional local work (FlexP-SFL-style flexible
+               participation): client i runs K_i local steps per round
+               with K_i ~ floor(t_max / t_i) so everyone finishes near the
+               sync barrier — fast clients do useful extra steps instead
+               of idling.  FedAvg weights are step-normalized (FedNova
+               style) in aggregation.fedavg so extra steps do not bias the
+               global adapter.
+
+Schedulers are small, stateless policy objects; everything they decide is
+arrays in a `RoundPlan`, so the engine below them never recompiles when
+the policy changes its mind.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.runtime.straggler import deadline_survivors, local_step_budgets
+
+SCHEDULERS = ("sync", "deadline", "local_steps")
+
+
+@dataclasses.dataclass
+class RoundPlan:
+    """Everything the engine + accounting need for one round.
+
+    active:       (N,) float {0,1} — pool membership x scheduler survivors.
+    step_budgets: (N,) int — local steps each client runs this round
+                  (0 for inactive clients; all-ones for sync/deadline).
+    sim_time:     simulated wall-clock of this round (seconds); 0.0 when
+                  no speed model is attached.
+    times:        per-client one-step round-time estimates (or None).
+    deadline:     the drop threshold, when the policy has one.
+    """
+
+    active: np.ndarray
+    step_budgets: np.ndarray
+    sim_time: float
+    times: Optional[np.ndarray] = None
+    deadline: Optional[float] = None
+
+
+def _barrier_time(active: np.ndarray, times: Optional[np.ndarray]) -> float:
+    if times is None:
+        return 0.0
+    sel = np.asarray(times, np.float64)[active > 0]
+    return float(sel.max()) if sel.size else 0.0
+
+
+class RoundScheduler:
+    """Base policy: synchronous lockstep (paper Algorithm 1)."""
+
+    name = "sync"
+    max_steps = 1          # static K cap: the engine's inner-scan length
+    needs_speed = False    # whether plan() requires round-time estimates
+
+    def plan(self, *, active, times=None, round_idx: int = 0) -> RoundPlan:
+        act = np.asarray(active, np.float64).copy()
+        budgets = np.where(act > 0, 1, 0).astype(np.int64)
+        return RoundPlan(active=act, step_budgets=budgets,
+                         sim_time=_barrier_time(act, times), times=times)
+
+
+class SyncScheduler(RoundScheduler):
+    pass
+
+
+class DeadlineScheduler(RoundScheduler):
+    """Drop clients that would blow the round deadline (straggler
+    mitigation moved out of SplitFTSystem.run)."""
+
+    name = "deadline"
+    needs_speed = True
+
+    def __init__(self, *, deadline_frac: float = 1.5):
+        self.deadline_frac = deadline_frac
+
+    def plan(self, *, active, times=None, round_idx: int = 0) -> RoundPlan:
+        if times is None:
+            raise ValueError("deadline scheduler needs round-time "
+                             "estimates (a SpeedModel)")
+        act = np.asarray(active, np.float64).copy()
+        surv, deadline = deadline_survivors(
+            np.asarray(times, np.float64),
+            deadline_frac=self.deadline_frac)
+        act = act * surv
+        budgets = np.where(act > 0, 1, 0).astype(np.int64)
+        return RoundPlan(active=act, step_budgets=budgets,
+                         sim_time=_barrier_time(act, times), times=times,
+                         deadline=deadline)
+
+
+class LocalStepsScheduler(RoundScheduler):
+    """Speed-proportional per-client local steps: fast clients fill the
+    sync barrier with extra useful steps instead of idling.
+
+    Each local step in split learning is a full f2/f4 exchange with the
+    server, so a step costs one `times[i]`; K_i = clamp(floor(t_max/t_i),
+    1, max_steps) keeps every client's K_i * t_i near the barrier t_max.
+    """
+
+    name = "local_steps"
+    needs_speed = True
+
+    def __init__(self, *, max_steps: int = 4):
+        if max_steps < 1:
+            raise ValueError(f"max_steps must be >= 1, got {max_steps}")
+        self.max_steps = max_steps
+
+    def plan(self, *, active, times=None, round_idx: int = 0) -> RoundPlan:
+        if times is None:
+            raise ValueError("local_steps scheduler needs round-time "
+                             "estimates (a SpeedModel)")
+        act = np.asarray(active, np.float64).copy()
+        t = np.asarray(times, np.float64)
+        budgets = local_step_budgets(t, max_steps=self.max_steps,
+                                     active=act)
+        sel = act > 0
+        sim = float((budgets[sel] * t[sel]).max()) if sel.any() else 0.0
+        return RoundPlan(active=act, step_budgets=budgets, sim_time=sim,
+                         times=times)
+
+
+def make_scheduler(name: str, *, deadline_frac: float = 1.5,
+                   max_local_steps: int = 4) -> RoundScheduler:
+    if name == "sync":
+        return SyncScheduler()
+    if name == "deadline":
+        return DeadlineScheduler(deadline_frac=deadline_frac)
+    if name == "local_steps":
+        return LocalStepsScheduler(max_steps=max_local_steps)
+    raise ValueError(
+        f"unknown scheduler {name!r}; known: {SCHEDULERS}")

@@ -151,28 +151,61 @@ def wire_bytes(name: str, *, batch: int, seq: int, d_model: int,
         f"unknown smashed compressor {name!r}; known: {COMPRESSORS}")
 
 
-def make_boundary(compressor: Optional[SmashedCompressor], cuts):
+def make_boundary(compressor: Optional[SmashedCompressor], cuts,
+                  residual=None):
     """Boundary hook for Model.run_blocks: compress x only where flat
     layer `fid` is the last client-side layer (cuts - 1) of that client.
 
     x carries the client axis first ((N, B, S, d)); cuts is the (N,) cut
     array, a traced input — so one executable covers every cut
-    configuration, compressed or not, per client."""
+    configuration, compressed or not, per client.
+
+    With `residual` (an (N, B, S, d) error-feedback buffer from round
+    state) the hook becomes *stateful*: the f2 message is
+    compress(x + residual) and the uncompressed remainder is carried out
+    of the forward as the next round's residual (Karimireddy-style EF,
+    parity with the adapter channel's ErrorFeedback).  Stateful hooks are
+    marked `stateful = True`, expose `init()` for the scan carry, and are
+    called as `x, carry = hook(x, carry, fid)`; the final carry is the new
+    residual.  EF tracks the forward (f2) channel; the f4 cotangent is
+    still compressed memorylessly by the straight-through VJP."""
     if compressor is None:
         return None
     cut_ids = jnp.asarray(cuts) - 1
 
-    def boundary(x, fid):
+    if residual is None:
+        def boundary(x, fid):
+            sel = (cut_ids == fid)
+            mask = sel.reshape((-1,) + (1,) * (x.ndim - 1))
+            # lax.cond so the L-1 non-cut layers skip the compressor
+            # entirely (forward AND backward — cond's VJP only runs the
+            # taken branch); the predicate is a traced scalar, so
+            # scan/remat still see one executable for every cut
+            # configuration.
+            return jax.lax.cond(
+                jnp.any(sel),
+                lambda op: jnp.where(mask, compressor.apply(op), op),
+                lambda op: op,
+                x)
+
+        return boundary
+
+    resid = jax.lax.stop_gradient(residual)
+
+    def ef_boundary(x, carry, fid):
         sel = (cut_ids == fid)
         mask = sel.reshape((-1,) + (1,) * (x.ndim - 1))
-        # lax.cond so the L-1 non-cut layers skip the compressor entirely
-        # (forward AND backward — cond's VJP only runs the taken branch);
-        # the predicate is a traced scalar, so scan/remat still see one
-        # executable for every cut configuration.
-        return jax.lax.cond(
-            jnp.any(sel),
-            lambda op: jnp.where(mask, compressor.apply(op), op),
-            lambda op: op,
-            x)
 
-    return boundary
+        def comp(ops):
+            x_, c_ = ops
+            xin = x_ + resid.astype(x_.dtype)
+            y = compressor.apply(xin)
+            new_r = jax.lax.stop_gradient(xin - y).astype(c_.dtype)
+            return jnp.where(mask, y, x_), jnp.where(mask, new_r, c_)
+
+        return jax.lax.cond(jnp.any(sel), comp, lambda ops: ops,
+                            (x, carry))
+
+    ef_boundary.stateful = True
+    ef_boundary.init = lambda: jnp.zeros_like(residual)
+    return ef_boundary

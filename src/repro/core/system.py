@@ -1,8 +1,18 @@
 """SplitFTSystem — host-side orchestration of the full paper workflow.
 
 Owns: corpus -> tokenize -> partition (C4) -> per-client loaders ->
-round loop (train step, straggler deadline, eval, C3 adjustment,
-aggregation weights, checkpoint/resume, elastic membership).
+round loop -> eval, C3 adjustment, aggregation weights,
+checkpoint/resume, elastic membership.
+
+The round loop itself is split engine/policy:
+
+  * the *engine* (rounds.make_train_step) is one jitted executable; which
+    clients run and how many local steps each takes per round is data;
+  * the *policy* is a RoundScheduler (repro.core.scheduler): sync
+    (Algorithm 1 lockstep), deadline (straggler drop), or local_steps
+    (speed-proportional K_i per client).  The scheduler also owns the
+    simulated wall-clock accounting (`sim_time` / cumulative `sim_clock`
+    in the round records) that the benchmarks compare.
 
 Everything device-side lives in rounds.py; this class only moves numpy
 batches in and metrics out, so it works identically on CPU (paper-scale
@@ -12,7 +22,6 @@ experiments) and on a mesh (dry-run / production).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -22,6 +31,8 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.config import ArchConfig
 from repro.core import adaptive, comm, rounds
+from repro.core import scheduler as scheduler_lib
+from repro.core.scheduler import RoundPlan
 from repro.core.split import serve_adapters
 from repro.data import (ClientDataLoader, make_client_loaders,
                         partition_dataset, synthetic_corpus)
@@ -30,7 +41,7 @@ from repro.data.tokenizer import HashTokenizer
 from repro.models.common import NO_SHARDING
 from repro.models.model import Model, build_model
 from repro.runtime.elastic import ClientPool
-from repro.runtime.straggler import SpeedModel, deadline_survivors
+from repro.runtime.straggler import SpeedModel
 
 
 @dataclasses.dataclass
@@ -44,8 +55,15 @@ class SystemConfig:
     smashed_compress: Optional[str] = None   # f2/f4 channel: none | int8 |
                                              # fp8 | topk; None -> arch.split
     smashed_topk_frac: Optional[float] = None
-    straggler_sim: bool = False
-    deadline_frac: float = 1.5
+    smashed_ef: Optional[bool] = None  # EF residual for smashed topk;
+                                       # None -> on iff compressor is topk
+    scheduler: Optional[str] = None    # sync | deadline | local_steps;
+                                       # None -> arch.split.scheduler
+                                       # (straggler_sim promotes sync ->
+                                       # deadline, the legacy spelling)
+    max_local_steps: Optional[int] = None    # None -> arch.split
+    straggler_sim: bool = False        # attach a SpeedModel
+    deadline_frac: Optional[float] = None    # None -> arch.split
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0
     keep_checkpoints: int = 3
@@ -85,7 +103,26 @@ class SplitFTSystem:
             batch_size=arch.train.batch_size, seq_len=arch.train.seq_len,
             seed=seed + 999)
 
-        # ---- model/state ----
+        # ---- round scheduler (policy) + straggler simulation ----
+        sched_name = self.sys.scheduler
+        if sched_name is None:
+            sched_name = arch.split.scheduler
+            if sched_name == "sync" and self.sys.straggler_sim:
+                sched_name = "deadline"   # legacy: straggler_sim == drop
+        dl_frac = (arch.split.deadline_frac
+                   if self.sys.deadline_frac is None
+                   else self.sys.deadline_frac)
+        k_cap = (arch.split.max_local_steps
+                 if self.sys.max_local_steps is None
+                 else self.sys.max_local_steps)
+        self.scheduler = scheduler_lib.make_scheduler(
+            sched_name, deadline_frac=dl_frac, max_local_steps=k_cap)
+        self.speed = (SpeedModel(n, seed=seed)
+                      if (self.sys.straggler_sim
+                          or self.scheduler.needs_speed) else None)
+        self.sim_clock = 0.0           # cumulative simulated seconds
+
+        # ---- model/state (engine) ----
         key = jax.random.PRNGKey(seed)
         k_base, k_state = jax.random.split(key)
         self.base_params = self.model.init_params(k_base)
@@ -98,12 +135,25 @@ class SplitFTSystem:
         self.smashed_topk_frac = (arch.split.smashed_topk_frac
                                   if self.sys.smashed_topk_frac is None
                                   else self.sys.smashed_topk_frac)
+        use_smashed_ef = (self.smashed_compress == "topk"
+                          if self.sys.smashed_ef is None
+                          else self.sys.smashed_ef)
+        if use_smashed_ef and self.smashed_compress != "topk":
+            raise ValueError(
+                "smashed_ef=True requires smashed_compress='topk' "
+                f"(got {self.smashed_compress!r}); int8/fp8 are "
+                "memoryless round-trips with no residual to feed back")
+        if use_smashed_ef:
+            self.state = rounds.with_smashed_ef(self.state, self.model)
+        if self.scheduler.max_steps > 1:
+            self.state = rounds.with_step_budgets(self.state)
         self.train_step = rounds.make_train_step(
             self.model, policy=policy, remat=arch.train.remat,
             agg_every=self.sys.agg_every, compress=self.sys.compress,
             topk_frac=self.sys.topk_frac,
             smashed_compress=self.smashed_compress,
-            smashed_topk_frac=self.smashed_topk_frac, jit=jit)
+            smashed_topk_frac=self.smashed_topk_frac,
+            max_local_steps=self.scheduler.max_steps, jit=jit)
         self.eval_step = rounds.make_eval_step(self.model, policy=policy,
                                                jit=jit)
 
@@ -111,8 +161,6 @@ class SplitFTSystem:
         self.c3_weights = np.ones(n)
         self.sample_counts = np.array([l.num_samples()
                                        for l in self.loaders], float)
-        self.speed = SpeedModel(n, seed=seed) if self.sys.straggler_sim \
-            else None
         self.ckpt = (CheckpointManager(self.sys.checkpoint_dir,
                                        keep=self.sys.keep_checkpoints)
                      if self.sys.checkpoint_dir else None)
@@ -131,82 +179,124 @@ class SplitFTSystem:
     def _train_batch(self, r: int):
         return stack_client_batches([l.batch(r) for l in self.loaders])
 
+    def _train_batches(self, r: int, k: int):
+        """(K, N, B, S) batch stack for the local-steps engine; inner step
+        j of round r draws from the deterministic stream at r * K + j."""
+        steps = [stack_client_batches([l.batch(r * k + j)
+                                       for l in self.loaders])
+                 for j in range(k)]
+        return {key: np.stack([s[key] for s in steps])
+                for key in steps[0]}
+
     def _eval_batch(self, r: int):
         return stack_client_batches([l.batch(r) for l in self.eval_loaders])
+
+    # ------------------------------------------------------------------
+    # round-loop pieces (one jitted step + host-side policy around it)
+
+    def _round_comm(self, cuts_np: np.ndarray) -> Dict[str, np.ndarray]:
+        """Per-client comm bytes for the current cuts — computed ONCE per
+        round, shared by the straggler model and the round record."""
+        arch = self.arch
+        return comm.round_comm_bytes(
+            self.model, cuts=cuts_np,
+            batch_size=arch.train.batch_size,
+            seq_len=arch.train.seq_len,
+            smashed_compress=self.smashed_compress,
+            smashed_topk_frac=self.smashed_topk_frac)
+
+    def _round_times(self, r: int, cuts_np: np.ndarray,
+                     cb: Dict[str, np.ndarray]) -> Optional[np.ndarray]:
+        if self.speed is None:
+            return None
+        arch = self.arch
+        flops_layer = 12 * arch.model.d_model ** 2 \
+            * arch.train.batch_size * arch.train.seq_len
+        return self.speed.round_times(
+            cuts=cuts_np, flops_per_layer=flops_layer,
+            smashed_bytes=float(cb["smashed_up"][0]),
+            adapter_bytes=cb["adapter_up"], round_idx=r)
+
+    def _plan_round(self, r: int):
+        """One scheduler decision: (RoundPlan, comm-bytes dict)."""
+        cuts_np = np.asarray(self.state["cuts"])
+        cb = self._round_comm(cuts_np)
+        times = self._round_times(r, cuts_np, cb)
+        plan = self.scheduler.plan(
+            active=self.pool.active.astype(np.float64), times=times,
+            round_idx=r)
+        return plan, cb
+
+    def _round_record(self, r: int, metrics, plan: RoundPlan,
+                      cb: Dict[str, np.ndarray]) -> Dict[str, Any]:
+        rec: Dict[str, Any] = {
+            "round": r,
+            "loss": float(metrics["total"]),
+            "ce": np.asarray(metrics["ce"]),
+            "accuracy": np.asarray(metrics["accuracy"]),
+            "cuts": np.asarray(self.state["cuts"]).copy(),
+            "active": plan.active.copy(),
+        }
+        if plan.times is not None:
+            rec["round_time_sim"] = plan.times
+            rec["sim_time"] = plan.sim_time
+            rec["sim_clock"] = self.sim_clock
+        # each local step is a full f2/f4 exchange, and a dropped/inactive
+        # client (budget 0) transmits nothing; it still receives the b3
+        # adapter broadcast but sends no b1 update.  With everyone active
+        # at one step this reduces exactly to cb["total"].
+        steps = plan.step_budgets.astype(np.float64)
+        smashed = (cb["smashed_up"] + cb["smashed_down"]) * steps
+        rec["comm"] = (smashed + cb["adapter_up"] * plan.active
+                       + cb["adapter_down"])
+        rec["comm_smashed"] = smashed
+        rec["smashed_ratio"] = cb["smashed_ratio"]
+        if self.scheduler.max_steps > 1:
+            rec["step_budgets"] = plan.step_budgets.copy()
+        return rec
+
+    def _adjust_c3(self, r: int, rec: Dict[str, Any], weights,
+                   times: Optional[np.ndarray]):
+        """C3: evaluate the global model per client, adjust cuts/weights."""
+        e_loss, e_metrics = self.eval_step(
+            self.base_params, self.state, self._eval_batch(r), weights)
+        accs = np.asarray(e_metrics["accuracy"])
+        rec["eval_ce"] = np.asarray(e_metrics["ce"])
+        rec["eval_accuracy"] = accs
+        self.c3_weights = adaptive.update_weights(
+            accs, self.arch.split.gamma)
+        new_cuts = adaptive.adjust_cuts(
+            np.asarray(self.state["cuts"]), accs, self.arch.split,
+            self.model.num_flat_layers, round_times=times)
+        self.state["cuts"] = jnp.asarray(new_cuts, jnp.int32)
+        rec["weights"] = self.c3_weights.copy()
 
     # ------------------------------------------------------------------
     def run(self, num_rounds: int, *, log_every: int = 10,
             callback: Optional[Callable] = None) -> List[Dict[str, Any]]:
         arch = self.arch
-        n = self.pool.max_clients
         lr_c = jnp.float32(arch.train.lr_client)
         lr_s = jnp.float32(arch.train.lr_server)
+        k = self.scheduler.max_steps
         start = int(self.state["round"])
         for r in range(start, start + num_rounds):
-            batch = self._train_batch(r)
+            plan, cb = self._plan_round(r)
+            batch = (self._train_batch(r) if k == 1
+                     else self._train_batches(r, k))
             weights = jnp.asarray(self.combined_weights(), jnp.float32)
-
-            # straggler deadline -> survivor mask for THIS round
-            active = self.pool.active.astype(np.float64)
-            times = None
-            if self.speed is not None:
-                cuts_np = np.asarray(self.state["cuts"])
-                cb = comm.round_comm_bytes(
-                    self.model, cuts=cuts_np,
-                    batch_size=arch.train.batch_size,
-                    seq_len=arch.train.seq_len,
-                    smashed_compress=self.smashed_compress,
-                    smashed_topk_frac=self.smashed_topk_frac)
-                flops_layer = 12 * arch.model.d_model ** 2 \
-                    * arch.train.batch_size * arch.train.seq_len
-                times = self.speed.round_times(
-                    cuts=cuts_np, flops_per_layer=flops_layer,
-                    smashed_bytes=float(cb["smashed_up"][0]),
-                    adapter_bytes=cb["adapter_up"], round_idx=r)
-                surv, _ = deadline_survivors(
-                    times, deadline_frac=self.sys.deadline_frac)
-                active = active * surv
-            active_j = jnp.asarray(active, jnp.float32)
+            if "step_budgets" in self.state:
+                self.state["step_budgets"] = jnp.asarray(
+                    plan.step_budgets, jnp.int32)
+            active_j = jnp.asarray(plan.active, jnp.float32)
 
             self.state, metrics = self.train_step(
                 self.base_params, self.state, batch, weights, active_j,
                 lr_c, lr_s)
+            self.sim_clock += plan.sim_time
 
-            rec: Dict[str, Any] = {
-                "round": r,
-                "loss": float(metrics["total"]),
-                "ce": np.asarray(metrics["ce"]),
-                "accuracy": np.asarray(metrics["accuracy"]),
-                "cuts": np.asarray(self.state["cuts"]).copy(),
-                "active": active.copy(),
-            }
-            if times is not None:
-                rec["round_time_sim"] = times
-            cb_rec = comm.round_comm_bytes(
-                self.model, cuts=np.asarray(self.state["cuts"]),
-                batch_size=arch.train.batch_size,
-                seq_len=arch.train.seq_len,
-                smashed_compress=self.smashed_compress,
-                smashed_topk_frac=self.smashed_topk_frac)
-            rec["comm"] = cb_rec["total"]
-            rec["comm_smashed"] = cb_rec["smashed_up"] + cb_rec["smashed_down"]
-            rec["smashed_ratio"] = cb_rec["smashed_ratio"]
-
-            # C3: evaluate global model per client, adjust cuts + weights
+            rec = self._round_record(r, metrics, plan, cb)
             if self._adaptive and (r + 1) % self.sys.adjust_every == 0:
-                e_loss, e_metrics = self.eval_step(
-                    self.base_params, self.state, self._eval_batch(r),
-                    weights)
-                accs = np.asarray(e_metrics["accuracy"])
-                rec["eval_ce"] = np.asarray(e_metrics["ce"])
-                rec["eval_accuracy"] = accs
-                self.c3_weights = adaptive.update_weights(
-                    accs, arch.split.gamma)
-                new_cuts = adaptive.adjust_cuts(
-                    np.asarray(self.state["cuts"]), accs, arch.split,
-                    self.model.num_flat_layers, round_times=times)
-                self.state["cuts"] = jnp.asarray(new_cuts, jnp.int32)
-                rec["weights"] = self.c3_weights.copy()
+                self._adjust_c3(r, rec, weights, plan.times)
 
             self.history.append(rec)
             if callback:
@@ -243,6 +333,11 @@ class SplitFTSystem:
             "c3_weights": self.c3_weights.tolist(),
             "active": self.pool.active.tolist(),
             "seed": self.seed,
+            "sim_clock": self.sim_clock,
+            "scheduler": self.scheduler.name,
+            # template signature: lets restore() explain a leaf-count
+            # mismatch instead of silently restarting from round 0
+            "state_keys": sorted(self.state.keys()),
         }
         self.ckpt.save(step, self.state, metadata=meta)
 
@@ -250,6 +345,30 @@ class SplitFTSystem:
         assert self.ckpt is not None
         got = self.ckpt.restore_latest(self.state)
         if got is None:
+            # distinguish "no checkpoints" from "checkpoints exist but the
+            # state template changed" — resuming with a different
+            # scheduler or smashed/EF config makes step_budgets /
+            # smashed_ef leaves appear or vanish, which must not silently
+            # restart from round 0
+            steps = self.ckpt.steps()
+            if steps:
+                meta = self.ckpt.metadata(steps[-1]) or {}
+                saved = meta.get("scheduler")
+                if saved and saved != self.scheduler.name:
+                    raise ValueError(
+                        f"checkpoint step {steps[-1]} was written with "
+                        f"scheduler={saved!r} but this run uses "
+                        f"{self.scheduler.name!r}; resume with the same "
+                        "scheduler or point at a fresh checkpoint dir")
+                saved_keys = meta.get("state_keys")
+                now_keys = sorted(self.state.keys())
+                if saved_keys and saved_keys != now_keys:
+                    raise ValueError(
+                        f"checkpoint step {steps[-1]} state template "
+                        f"{saved_keys} does not match this run's "
+                        f"{now_keys} (scheduler / smashed-EF / adapter-"
+                        "compression config changed); resume with the "
+                        "original config or use a fresh checkpoint dir")
             return False
         tree, meta, step = got
         self.state = jax.tree.map(jnp.asarray, tree)
@@ -257,6 +376,7 @@ class SplitFTSystem:
                                               self.c3_weights))
         if "active" in meta:
             self.pool.active = np.asarray(meta["active"], bool)
+        self.sim_clock = float(meta.get("sim_clock", 0.0))
         return True
 
     # ------------------------------------------------------------------

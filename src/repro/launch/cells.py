@@ -107,14 +107,27 @@ def build_train_cell(arch: ArchConfig, shape: ShapeConfig, mesh,
                      *, num_clients: int = DRYRUN_CLIENTS,
                      remat: str = "full", ce_chunk: int = 512,
                      unroll: bool = False, seq_shard: bool = None,
-                     microbatch: int = 0) -> Cell:
+                     microbatch: int = 0, scheduler: str = "sync",
+                     max_local_steps: int = 0) -> Cell:
     if seq_shard is None:
         # §Perf P11: sequence parallelism is a large win for attention
         # stacks but a 40-50x collective REGRESSION for SSM/hybrid — the
         # SSD scan needs the contiguous sequence, so every layer pays a
         # full-activation all-gather while saving almost nothing.
         seq_shard = arch.model.family not in ("ssm", "hybrid")
-    if microbatch <= 0:
+    k_steps = 1
+    if scheduler == "local_steps":
+        k_steps = max_local_steps or arch.split.max_local_steps
+    if k_steps > 1:
+        if microbatch > 1:
+            raise ValueError(
+                "scheduler='local_steps' does not compose with "
+                "microbatch accumulation (rounds.make_train_step); "
+                "drop the explicit microbatch or use scheduler='sync'")
+        # the local-steps engine carries its own inner scan; skip the
+        # activation-budget auto-pick instead of silently accumulating
+        microbatch = 1
+    elif microbatch <= 0:
         microbatch = _auto_microbatch(arch, shape, mesh, num_clients,
                                       seq_shard=seq_shard)
     arch = tune_arch_for_cell(arch, shape, num_clients=num_clients)
@@ -125,9 +138,22 @@ def build_train_cell(arch: ArchConfig, shape: ShapeConfig, mesh,
     key = jax.random.PRNGKey(0)
     base_abs = jax.eval_shape(
         functools.partial(model.init_params, dtype=PARAM_DTYPE), key)
-    state_abs = jax.eval_shape(
-        functools.partial(rounds.init_state, model, num_clients=n), key)
+
+    def make_state(k):
+        s = rounds.init_state(model, k, num_clients=n)
+        return rounds.with_step_budgets(s) if k_steps > 1 else s
+
+    state_abs = jax.eval_shape(make_state, key)
     batch_abs = model.input_specs(shape, num_clients=n, dtype=PARAM_DTYPE)
+    batch_specs = shard_rules.batch_specs(batch_abs, mesh, client_dim=True)
+    if k_steps > 1:
+        # leading (K,) step axis: replicated, clients still on `data`
+        batch_abs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((k_steps,) + s.shape, s.dtype),
+            batch_abs)
+        batch_specs = jax.tree.map(
+            lambda p: P(*((None,) + tuple(p))), batch_specs,
+            is_leaf=lambda x: isinstance(x, P))
     w_abs = jax.ShapeDtypeStruct((n,), jnp.float32)
     lr_abs = jax.ShapeDtypeStruct((), jnp.float32)
 
@@ -135,11 +161,11 @@ def build_train_cell(arch: ArchConfig, shape: ShapeConfig, mesh,
         model, policy=policy, remat=remat, ce_chunk=ce_chunk,
         microbatch=microbatch,
         smashed_compress=arch.split.smashed_compress,
-        smashed_topk_frac=arch.split.smashed_topk_frac, jit=False)
+        smashed_topk_frac=arch.split.smashed_topk_frac,
+        max_local_steps=k_steps, jit=False)
 
     base_specs = shard_rules.param_specs(base_abs, mesh)
     state_specs = _state_specs(state_abs, mesh)
-    batch_specs = shard_rules.batch_specs(batch_abs, mesh, client_dim=True)
 
     to_shardings = lambda specs: jax.tree.map(
         lambda s: NamedSharding(mesh, s), specs,
@@ -155,7 +181,8 @@ def build_train_cell(arch: ArchConfig, shape: ShapeConfig, mesh,
                 model=model,
                 info={"kind": "train", "num_clients": n,
                       "per_client_batch": arch.train.batch_size,
-                      "microbatch": microbatch})
+                      "microbatch": microbatch, "scheduler": scheduler,
+                      "max_local_steps": k_steps})
 
 
 def _state_specs(state_abs, mesh):
@@ -252,4 +279,6 @@ def build_cell(arch: ArchConfig, shape: ShapeConfig, mesh, **kw) -> Cell:
     kw.pop("remat", None)
     kw.pop("ce_chunk", None)
     kw.pop("num_clients", None)
+    kw.pop("scheduler", None)
+    kw.pop("max_local_steps", None)
     return build_serve_cell(arch, shape, mesh, **kw)

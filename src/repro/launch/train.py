@@ -43,6 +43,15 @@ def main(argv=None):
                     help="smashed-activation (f2/f4) channel compressor; "
                          "default: the arch config's choice")
     ap.add_argument("--smashed-topk-frac", type=float, default=None)
+    ap.add_argument("--scheduler", default=None,
+                    choices=[None, "sync", "deadline", "local_steps"],
+                    help="round scheduler (repro.core.scheduler); "
+                         "default: the arch config's choice "
+                         "(--straggler-sim alone implies deadline)")
+    ap.add_argument("--max-local-steps", type=int, default=None,
+                    help="static K cap for --scheduler local_steps")
+    ap.add_argument("--deadline-frac", type=float, default=None,
+                    help="drop threshold (x median) for deadline")
     ap.add_argument("--straggler-sim", action="store_true")
     ap.add_argument("--samples", type=int, default=2000)
     ap.add_argument("--out", default="runs/train")
@@ -82,6 +91,9 @@ def main(argv=None):
         num_samples=args.samples, compress=args.compress,
         smashed_compress=args.smashed_compress,
         smashed_topk_frac=args.smashed_topk_frac,
+        scheduler=args.scheduler,
+        max_local_steps=args.max_local_steps,
+        deadline_frac=args.deadline_frac,
         straggler_sim=args.straggler_sim,
         checkpoint_dir=os.path.join(args.out, "ckpt"),
         checkpoint_every=max(args.rounds // 5, 1))

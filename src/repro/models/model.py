@@ -300,18 +300,27 @@ class Model:
                    layer_hi: Optional[int] = None, boundary=None):
         """Run flat layers [layer_lo, layer_hi) over activations x.
 
-        Returns (x, aux_total, new_cache).  `cache` is the model-level cache
-        pytree (or None); `memory` the encoder output for cross-attention
-        groups.
+        Returns (x, aux_total, new_cache, boundary_carry).  `cache` is the
+        model-level cache pytree (or None); `memory` the encoder output for
+        cross-attention groups.
 
         `boundary(x, flat_id) -> x` is applied to every layer output with
         its flat layer id (traced inside scans).  The SplitFT round engine
         uses it to compress the smashed activation exactly where each
         client's cut sits — since the id is data, the hook keeps the
-        single-executable property of the mask-based split."""
+        single-executable property of the mask-based split.
+
+        A *stateful* boundary (attribute `stateful = True`, e.g. the
+        smashed error-feedback hook) additionally threads a carry:
+        `x, carry = boundary(x, carry, flat_id)`, initialized from
+        `boundary.init()` and returned as `boundary_carry` (an empty tuple
+        for stateless hooks — zero extra leaves, so the compiled HLO is
+        unchanged)."""
         cfg = self.cfg
         hi_total = self.num_flat_layers if layer_hi is None else layer_hi
         aux_total = jnp.float32(0.0)
+        b_stateful = bool(getattr(boundary, "stateful", False))
+        bcarry = boundary.init() if b_stateful else ()
         new_cache = dict(cache) if cache is not None else None
         cache_len = cache["len"] if cache is not None else None
 
@@ -335,20 +344,20 @@ class Model:
                 continue
             glo = lo + (a - run_flat_lo)
             ghi = lo + (b - run_flat_lo)
-            x, aux_total, new_cache = self._run_group(
+            x, aux_total, new_cache, bcarry = self._run_group(
                 g, params, adapters, x, glo, ghi, policy=policy, mode=mode,
                 remat=remat, cache=new_cache, cache_len=cache_len, rope=rope,
                 memory=memory, aux_total=aux_total, flat_lo=a,
-                boundary=boundary)
+                boundary=boundary, bcarry=bcarry)
         if new_cache is not None and mode == "decode":
             new_cache["len"] = cache_len + 1
         elif new_cache is not None and mode == "prefill":
             new_cache["len"] = cache_len + x.shape[-2]
-        return x, aux_total, new_cache
+        return x, aux_total, new_cache, bcarry
 
     def _run_group(self, g: GroupSpec, params, adapters, x, lo, hi, *,
                    policy, mode, remat, cache, cache_len, rope, memory,
-                   aux_total, flat_lo: int = 0, boundary=None):
+                   aux_total, flat_lo: int = 0, boundary=None, bcarry=()):
         p_g = params[g.name]
         ad_g = adapters.get(g.name) if adapters else None
         cache_g = cache.get(g.name) if cache else None
@@ -388,18 +397,22 @@ class Model:
             return out
 
         mem = memory if g.cross else None
+        b_stateful = bool(getattr(boundary, "stateful", False))
         if g.scan and (hi - lo) > 1:
             window = g.window_of(lo)
             body = self._layer_body(g, policy=policy, mode=mode, rope=rope,
                                     memory=mem, window=window)
 
             def scan_body(carry, xs):
-                xc, aux = carry
+                xc, aux, bc = carry
                 p_l, ad_l, c_l, fid = xs
                 self_c, mem_c = split_layer_cache(c_l)
                 xc, a, c_new, m_new = body(xc, p_l, ad_l, self_c, mem_c)
                 if boundary is not None:
-                    xc = boundary(xc, fid)
+                    if b_stateful:
+                        xc, bc = boundary(xc, bc, fid)
+                    else:
+                        xc = boundary(xc, fid)
                 ys = None
                 if c_l is not None:
                     if g.kind != "ssm":
@@ -408,12 +421,12 @@ class Model:
                         if g.cross and mode == "decode":
                             c_new["xk"], c_new["xv"] = c_l["xk"], c_l["xv"]
                     ys = pack_new(c_new, m_new)
-                return (xc, aux + a), ys
+                return (xc, aux + a, bc), ys
 
             if mode == "train":
                 scan_body = self._maybe_remat(scan_body, remat)
-            (x, aux_total), new_c = jax.lax.scan(
-                scan_body, (x, aux_total),
+            (x, aux_total, bcarry), new_c = jax.lax.scan(
+                scan_body, (x, aux_total, bcarry),
                 (slice_tree(p_g, lo, hi), slice_tree(ad_g, lo, hi),
                  slice_tree(cache_g, lo, hi),
                  jnp.arange(flat_lo, flat_lo + (hi - lo))))
@@ -424,7 +437,7 @@ class Model:
                     merged[k] = jax.lax.dynamic_update_slice_in_dim(
                         merged[k], v.astype(merged[k].dtype), lo, axis=0)
                 cache[g.name] = merged
-            return x, aux_total, cache
+            return x, aux_total, cache, bcarry
 
         # unrolled path: static layer indices (per-layer windows, short runs)
         new_cache_g = dict(cache_g) if cache_g is not None else None
@@ -440,7 +453,10 @@ class Model:
                 body = self._maybe_remat(body, remat)
             x, a, c_new, m_new = body(x, p_l, ad_l, self_c, mem_c)
             if boundary is not None:
-                x = boundary(x, flat_lo + (i - lo))
+                if b_stateful:
+                    x, bcarry = boundary(x, bcarry, flat_lo + (i - lo))
+                else:
+                    x = boundary(x, flat_lo + (i - lo))
             aux_total = aux_total + a
             if new_cache_g is not None and c_new is not None:
                 if g.kind != "ssm":
@@ -455,7 +471,7 @@ class Model:
         if cache is not None and new_cache_g is not None:
             cache = dict(cache)
             cache[g.name] = new_cache_g
-        return x, aux_total, cache
+        return x, aux_total, cache, bcarry
 
     # -- encoder (whisper) -----------------------------------------------------
 
@@ -463,25 +479,33 @@ class Model:
                remat: str = "none", boundary=None):
         """frames ([N,]B, S_enc, d) stub embeddings -> encoder output."""
         cfg = self.cfg
+        if getattr(boundary, "stateful", False):
+            raise NotImplementedError(
+                "stateful (error-feedback) smashed boundaries are not "
+                "supported across the encoder stack")
         x = frames + params["embed"]["enc_pos"].astype(frames.dtype)
         x = policy.act(x)
         g = self.group_by_name["enc"]
         n_enc = g.size
-        x, aux, _ = self.run_blocks(params, adapters, x, policy=policy,
-                                    mode="train", remat=remat,
-                                    layer_lo=0, layer_hi=n_enc,
-                                    boundary=boundary)
+        x, aux, _, _ = self.run_blocks(params, adapters, x, policy=policy,
+                                       mode="train", remat=remat,
+                                       layer_lo=0, layer_hi=n_enc,
+                                       boundary=boundary)
         return apply_norm(params["enc_norm"], x, kind=cfg.norm,
                           eps=cfg.norm_eps)
 
     # -- top-level entry points ------------------------------------------------
 
     def forward(self, params, adapters, batch, *, policy=NO_SHARDING,
-                remat="none", cache=None, mode="train", boundary=None):
+                remat="none", cache=None, mode="train", boundary=None,
+                return_boundary: bool = False):
         """Full forward to hidden states (pre-head).
 
         batch: {"tokens": ([N,]B,S)[, "prefix": ([N,]B,P,d)]
-                [, "frames": ([N,]B,S_enc,d)]}."""
+                [, "frames": ([N,]B,S_enc,d)]}.
+
+        return_boundary=True appends the boundary carry (the smashed EF
+        residual for stateful hooks) to the return tuple."""
         cfg = self.cfg
         tokens = batch["tokens"]
         memory = None
@@ -498,11 +522,13 @@ class Model:
                      else jnp.arange(tokens.shape[-1]))
         x = self.embed(params, tokens, positions=positions,
                        prefix=batch.get("prefix"), policy=policy)
-        x, aux, new_cache = self.run_blocks(
+        x, aux, new_cache, bcarry = self.run_blocks(
             params, adapters, x, policy=policy, mode=mode, remat=remat,
             cache=cache, memory=memory, layer_lo=lo, boundary=boundary)
         x = apply_norm(params["final_norm"], x, kind=cfg.norm,
                        eps=cfg.norm_eps)
+        if return_boundary:
+            return x, aux, new_cache, bcarry
         return x, aux, new_cache
 
     def loss(self, params, adapters, batch, *, policy=NO_SHARDING,
@@ -513,10 +539,18 @@ class Model:
         per_client=True keeps the leading client axis un-reduced: returns
         ((N,) nll, metrics with (N,) entries) — the SplitFT round engine
         weights and combines them (paper formula 2).  `boundary` is the
-        cut-layer hook (see run_blocks) used for smashed compression."""
-        x, aux, _ = self.forward(params, adapters, batch, policy=policy,
-                                 remat=remat, mode="train",
-                                 boundary=boundary)
+        cut-layer hook (see run_blocks) used for smashed compression; a
+        stateful (EF) boundary's new residual is returned as
+        metrics["smashed_ef"]."""
+        b_stateful = bool(getattr(boundary, "stateful", False))
+        if b_stateful:
+            x, aux, _, bcarry = self.forward(
+                params, adapters, batch, policy=policy, remat=remat,
+                mode="train", boundary=boundary, return_boundary=True)
+        else:
+            x, aux, _ = self.forward(params, adapters, batch,
+                                     policy=policy, remat=remat,
+                                     mode="train", boundary=boundary)
         labels = batch["labels"]
         mask = batch.get("loss_mask")
         if mask is None:
@@ -532,8 +566,10 @@ class Model:
         nll_sum, hits, cnt = sums
         cnt = jnp.maximum(cnt, 1.0)
         nll, acc = nll_sum / cnt, hits / cnt
-        return nll + aux, {"ce": nll, "aux": aux, "accuracy": acc,
-                           "tokens": cnt}
+        metrics = {"ce": nll, "aux": aux, "accuracy": acc, "tokens": cnt}
+        if b_stateful:
+            metrics["smashed_ef"] = bcarry
+        return nll + aux, metrics
 
     def _chunked_ce(self, params, x, labels, mask, chunk, policy, keep):
         """CE over sequence chunks; logits for one chunk at a time are live

@@ -9,6 +9,10 @@ deliverable and transfer unchanged to physical deployments:
   * deadline-based partial aggregation — clients that would exceed the
     round deadline are excluded from this round's FedAvg (survivor
     re-weighting keeps the estimator unbiased w.r.t. sample counts);
+  * speed-proportional local steps — instead of dropping the slow or
+    stalling the fast, each client gets a step budget K_i so that
+    K_i * t_i lands near the barrier (consumed by the local_steps
+    scheduler, repro.core.scheduler);
   * adaptive cut (paper C3) doubles as straggler mitigation: slow clients
     shed layers, directly reducing their round time.
 """
@@ -57,6 +61,26 @@ class SpeedModel:
         comm = (2.0 * smashed_bytes + np.asarray(adapter_bytes)) \
             / self.bandwidth
         return (compute + comm) * jitter
+
+
+def local_step_budgets(times: np.ndarray, *, max_steps: int,
+                       active: Optional[np.ndarray] = None) -> np.ndarray:
+    """Per-client local-step budgets K_i = clamp(floor(t_max/t_i), 1, cap).
+
+    t_max is the slowest *active* client's one-step time (the sync
+    barrier), so K_i * t_i <= t_max: every client finishes its budget
+    near the moment the slowest finishes its single step.  Inactive
+    clients get budget 0."""
+    t = np.asarray(times, np.float64)
+    act = (np.ones_like(t) if active is None
+           else np.asarray(active, np.float64))
+    sel = act > 0
+    if not sel.any():
+        return np.zeros(t.shape, np.int64)
+    t_max = float(t[sel].max())
+    k = np.floor(t_max / np.maximum(t, 1e-12)).astype(np.int64)
+    k = np.clip(k, 1, max_steps)
+    return np.where(sel, k, 0)
 
 
 def deadline_survivors(times: np.ndarray, *, deadline_frac: float = 1.5

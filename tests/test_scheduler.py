@@ -1,0 +1,377 @@
+"""Round-scheduler subsystem tests: policy plans, engine equivalence
+(sync == local_steps at K_i = 1, bitwise), step-normalized FedAvg,
+smashed-EF residuals, and checkpoint persistence of scheduler state."""
+
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import reduced
+from repro.configs import get_config
+from repro.core import aggregation, lora as lora_lib, rounds, \
+    scheduler as scheduler_lib
+from repro.core.system import SplitFTSystem, SystemConfig
+from repro.models.model import build_model
+from repro.runtime.straggler import SpeedModel, local_step_budgets
+
+
+def small_arch(layers=4, lr=3e-3):
+    arch = reduced(get_config("gpt2-small"), layers=layers, d_model=64,
+                   vocab=512, seq_len=64, batch=4)
+    return arch.replace(train=dataclasses.replace(
+        arch.train, lr_client=lr, lr_server=lr))
+
+
+SYS = dict(num_samples=150, eval_samples=32)
+
+
+def tiny_model(layers=4):
+    arch = reduced(get_config("gpt2-small"), layers=layers, d_model=32,
+                   vocab=128, seq_len=16, batch=2)
+    return build_model(arch)
+
+
+# ---------------------------------------------------------------------------
+# policy plans (host side)
+
+
+def test_sync_plan_keeps_everyone_one_step():
+    s = scheduler_lib.make_scheduler("sync")
+    times = np.array([1.0, 2.0, 10.0])
+    plan = s.plan(active=np.ones(3), times=times)
+    assert plan.active.tolist() == [1, 1, 1]
+    assert plan.step_budgets.tolist() == [1, 1, 1]
+    # lockstep: the round costs the slowest client's step
+    assert plan.sim_time == 10.0
+
+
+def test_deadline_plan_drops_stragglers_and_ends_at_survivor():
+    s = scheduler_lib.make_scheduler("deadline", deadline_frac=1.5)
+    times = np.array([1.0, 2.0, 10.0])
+    plan = s.plan(active=np.ones(3), times=times)
+    assert plan.active.tolist() == [1, 1, 0]
+    assert plan.step_budgets.tolist() == [1, 1, 0]
+    assert plan.sim_time == 2.0           # last survivor, not the straggler
+    assert plan.deadline == pytest.approx(3.0)
+
+
+def test_local_steps_plan_speed_proportional():
+    s = scheduler_lib.make_scheduler("local_steps", max_local_steps=4)
+    times = np.array([1.0, 2.5, 10.0])
+    plan = s.plan(active=np.ones(3), times=times)
+    # K_i = clamp(floor(10 / t_i), 1, 4); nobody dropped
+    assert plan.active.tolist() == [1, 1, 1]
+    assert plan.step_budgets.tolist() == [4, 4, 1]
+    # everyone finishes by the sync barrier
+    assert plan.sim_time == 10.0
+    assert (plan.step_budgets * times <= plan.sim_time + 1e-9).all()
+
+
+def test_local_step_budgets_respects_membership_and_cap():
+    times = np.array([1.0, 1.0, 8.0, 100.0])
+    active = np.array([1.0, 0.0, 1.0, 1.0])
+    k = local_step_budgets(times, max_steps=16, active=active)
+    assert k[1] == 0                      # inactive -> no budget
+    assert k[3] == 1                      # slowest active anchors at 1
+    assert k[0] == 16                     # capped (100/1 > 16)
+    assert k[2] == 12                     # floor(100/8)
+
+
+def test_unknown_scheduler_raises():
+    with pytest.raises(ValueError):
+        scheduler_lib.make_scheduler("gossip")
+    with pytest.raises(ValueError):
+        scheduler_lib.make_scheduler("local_steps", max_local_steps=0)
+
+
+def test_deadline_without_speed_model_raises():
+    s = scheduler_lib.make_scheduler("deadline")
+    with pytest.raises(ValueError):
+        s.plan(active=np.ones(3), times=None)
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence: the K-step scan with all budgets == 1 is the sync
+# step, bit for bit (under jit, the deployment configuration)
+
+
+def test_local_steps_engine_k1_bit_identical_to_sync():
+    model = tiny_model()
+    arch = model.arch
+    n = 3
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key)
+    v = arch.model.vocab_size
+    batch = {"tokens": jax.random.randint(key, (n, 2, 16), 3, v),
+             "labels": jax.random.randint(key, (n, 2, 16), 3, v),
+             "loss_mask": jnp.ones((n, 2, 16), jnp.float32)}
+    w = jnp.ones(n) / n
+    act = jnp.ones(n)
+    lr = jnp.float32(1e-2)
+    K = 3
+
+    s_sync = rounds.init_state(model, key, num_clients=n)
+    step_sync = rounds.make_train_step(model, jit=True)
+    s_ls = rounds.with_step_budgets(
+        rounds.init_state(model, key, num_clients=n))
+    step_ls = rounds.make_train_step(model, max_local_steps=K, jit=True)
+
+    for _ in range(3):
+        batch_k = jax.tree.map(lambda t: jnp.stack([t] * K), batch)
+        s_sync, m1 = step_sync(params, s_sync, batch, w, act, lr, lr)
+        s_ls, mk = step_ls(params, s_ls, batch_k, w, act, lr, lr)
+
+    assert int(s_ls["round"]) == int(s_sync["round"]) == 3
+    np.testing.assert_array_equal(np.asarray(m1["total"]),
+                                  np.asarray(mk["total"]))
+    for k in ("client_adapters", "server_adapters", "opt_c", "opt_s"):
+        for a, b in zip(jax.tree.leaves(s_sync[k]),
+                        jax.tree.leaves(s_ls[k])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_local_steps_budgets_freeze_exhausted_clients():
+    """A client with budget 1 must end the round with exactly its
+    one-step adapters; a budget-K client must differ from them."""
+    model = tiny_model()
+    arch = model.arch
+    n = 2
+    key = jax.random.PRNGKey(1)
+    params = model.init_params(key)
+    v = arch.model.vocab_size
+    batch = {"tokens": jax.random.randint(key, (n, 2, 16), 3, v),
+             "labels": jax.random.randint(key, (n, 2, 16), 3, v),
+             "loss_mask": jnp.ones((n, 2, 16), jnp.float32)}
+    w = jnp.ones(n) / n
+    act = jnp.ones(n)
+    lr = jnp.float32(1e-2)
+    K = 3
+    batch_k = jax.tree.map(lambda t: jnp.stack([t] * K), batch)
+
+    # agg_every large so FedAvg does not mix the clients this round
+    def run(budgets):
+        state = rounds.with_step_budgets(
+            rounds.init_state(model, key, num_clients=n))
+        state["step_budgets"] = jnp.asarray(budgets, jnp.int32)
+        step = rounds.make_train_step(model, max_local_steps=K,
+                                      agg_every=100, jit=True)
+        state, _ = step(params, state, batch_k, w, act, lr, lr)
+        return state
+
+    s_hetero = run([1, K])
+    s_ones = run([1, 1])
+    a_het = np.asarray(s_hetero["client_adapters"]["dec"]["q"]["A"])
+    a_one = np.asarray(s_ones["client_adapters"]["dec"]["q"]["A"])
+    # client 0 (budget 1) froze after step 1 in both runs
+    np.testing.assert_array_equal(a_het[:, 0], a_one[:, 0])
+    # client 1 kept stepping
+    assert np.abs(a_het[:, 1] - a_one[:, 1]).max() > 0
+
+
+# ---------------------------------------------------------------------------
+# step-normalized FedAvg
+
+
+def test_fedavg_steps_divide_weights():
+    model = tiny_model()
+    n = 3
+    cad = lora_lib.init_adapters(model, jax.random.PRNGKey(0),
+                                 num_clients=n)
+    cuts = jnp.asarray([2, 2, 2])
+    w = jnp.asarray([0.5, 0.3, 0.2])
+    act = jnp.ones(n)
+    steps = jnp.asarray([1.0, 2.0, 4.0])
+    a = aggregation.fedavg(model, cad, cuts, w, act, steps=steps)
+    b = aggregation.fedavg(model, cad, cuts, w / steps, act)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-6, atol=1e-7)
+    # steps=None / all-ones is the unnormalized paper rule
+    c = aggregation.fedavg(model, cad, cuts, w, act,
+                           steps=jnp.ones(n))
+    d = aggregation.fedavg(model, cad, cuts, w, act)
+    for x, y in zip(jax.tree.leaves(c), jax.tree.leaves(d)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# system level: scheduler selection, legacy spelling, persistence
+
+
+def test_straggler_sim_legacy_maps_to_deadline():
+    sys_ = SplitFTSystem(small_arch(), SystemConfig(straggler_sim=True,
+                                                    **SYS), seed=3)
+    assert sys_.scheduler.name == "deadline"
+    sys2 = SplitFTSystem(small_arch(), SystemConfig(straggler_sim=True,
+                                                    scheduler="sync",
+                                                    **SYS), seed=3)
+    assert sys2.scheduler.name == "sync"          # explicit sync wins
+    assert sys2.speed is not None                 # but still simulates
+
+
+def test_local_steps_system_trains_and_records_budgets():
+    cfg = SystemConfig(scheduler="local_steps", max_local_steps=4, **SYS)
+    sys_ = SplitFTSystem(small_arch(), cfg, seed=0)
+    hist = sys_.run(4, log_every=0)
+    for h in hist:
+        b = h["step_budgets"]
+        assert b.max() <= 4 and b[h["active"] > 0].min() >= 1
+        assert h["sim_time"] > 0
+    assert hist[-1]["sim_clock"] == pytest.approx(
+        sum(h["sim_time"] for h in hist))
+    assert np.isfinite(hist[-1]["loss"])
+    # fast clients ship more smashed bytes than slow ones
+    assert np.sum(hist[-1]["comm"]) > 0
+
+
+def test_local_steps_k1_system_matches_sync_bitwise():
+    """max_local_steps=1 degenerates local_steps to the sync engine."""
+    s_sync = SplitFTSystem(small_arch(), SystemConfig(**SYS), seed=0)
+    s_sync.run(3, log_every=0)
+    cfg = SystemConfig(scheduler="local_steps", max_local_steps=1, **SYS)
+    s_ls = SplitFTSystem(small_arch(), cfg, seed=0)
+    s_ls.run(3, log_every=0)
+    a = np.asarray(s_sync.state["client_adapters"]["dec"]["q"]["A"])
+    b = np.asarray(s_ls.state["client_adapters"]["dec"]["q"]["A"])
+    np.testing.assert_array_equal(a, b)
+
+
+def test_deadline_comm_record_skips_dropped_clients():
+    """A dropped client transmits no smashed bytes and no b1 update; it
+    still receives the b3 broadcast."""
+    cfg = SystemConfig(straggler_sim=True, deadline_frac=1.2, **SYS)
+    sys_ = SplitFTSystem(small_arch(), cfg, seed=3)
+    hist = sys_.run(6, log_every=0)
+    dropped = [h for h in hist if h["active"].sum() < 3]
+    assert dropped
+    h = dropped[0]
+    i = int(np.argmin(h["active"]))
+    j = int(np.argmax(h["active"]))
+    assert h["comm_smashed"][i] == 0
+    assert h["comm_smashed"][j] > 0
+    assert 0 < h["comm"][i] < h["comm"][j]    # b3 broadcast only
+
+
+def test_smashed_ef_requires_topk():
+    cfg = SystemConfig(smashed_compress="int8", smashed_ef=True, **SYS)
+    with pytest.raises(ValueError, match="topk"):
+        SplitFTSystem(small_arch(), cfg, seed=0)
+
+
+def test_restore_with_different_scheduler_raises():
+    arch = small_arch()
+    with tempfile.TemporaryDirectory() as d:
+        cfg = SystemConfig(checkpoint_dir=d, checkpoint_every=2, **SYS)
+        s1 = SplitFTSystem(arch, cfg, seed=0)
+        s1.run(2, log_every=0)
+        cfg2 = dataclasses.replace(cfg, scheduler="local_steps")
+        s2 = SplitFTSystem(arch, cfg2, seed=0)
+        with pytest.raises(ValueError, match="scheduler"):
+            s2.restore()
+
+
+def test_restore_with_different_state_template_raises():
+    """Same scheduler, but the smashed-EF leaf vanished: restore must
+    diagnose the template change, not silently restart from round 0."""
+    arch = small_arch()
+    with tempfile.TemporaryDirectory() as d:
+        cfg = SystemConfig(checkpoint_dir=d, checkpoint_every=2,
+                           smashed_compress="topk",
+                           smashed_topk_frac=0.25, **SYS)
+        s1 = SplitFTSystem(arch, cfg, seed=0)
+        s1.run(2, log_every=0)
+        cfg2 = dataclasses.replace(cfg, smashed_compress="none")
+        s2 = SplitFTSystem(arch, cfg2, seed=0)
+        with pytest.raises(ValueError, match="template"):
+            s2.restore()
+
+
+def test_checkpoint_roundtrips_scheduler_state():
+    """step budgets + smashed EF residuals survive save/restore exactly."""
+    arch = small_arch()
+    with tempfile.TemporaryDirectory() as d:
+        cfg = SystemConfig(scheduler="local_steps", max_local_steps=3,
+                           smashed_compress="topk", smashed_topk_frac=0.25,
+                           checkpoint_dir=d, checkpoint_every=2, **SYS)
+        s1 = SplitFTSystem(arch, cfg, seed=0)
+        s1.run(4, log_every=0)
+        assert "step_budgets" in s1.state and "smashed_ef" in s1.state
+        assert np.abs(np.asarray(s1.state["smashed_ef"])).max() > 0
+
+        s2 = SplitFTSystem(arch, cfg, seed=0)
+        assert s2.restore()
+        assert int(s2.state["round"]) == 4
+        np.testing.assert_array_equal(
+            np.asarray(s1.state["step_budgets"]),
+            np.asarray(s2.state["step_budgets"]))
+        np.testing.assert_array_equal(
+            np.asarray(s1.state["smashed_ef"]),
+            np.asarray(s2.state["smashed_ef"]))
+        assert s2.sim_clock == pytest.approx(s1.sim_clock)
+        s2.run(2, log_every=0)            # continues fine
+
+
+def test_smashed_ef_frozen_for_inactive_clients():
+    """A deadline-dropped client transmitted nothing this round: its
+    accumulated EF residual must survive the round unchanged (both
+    engines)."""
+    model = tiny_model()
+    arch = model.arch
+    n = 2
+    key = jax.random.PRNGKey(2)
+    params = model.init_params(key)
+    v = arch.model.vocab_size
+    batch = {"tokens": jax.random.randint(key, (n, 2, 16), 3, v),
+             "labels": jax.random.randint(key, (n, 2, 16), 3, v),
+             "loss_mask": jnp.ones((n, 2, 16), jnp.float32)}
+    w = jnp.ones(n) / n
+    lr = jnp.float32(1e-2)
+
+    def ef_after(active, local_steps):
+        state = rounds.with_smashed_ef(
+            rounds.init_state(model, key, num_clients=n), model)
+        if local_steps:
+            state = rounds.with_step_budgets(state)
+            step = rounds.make_train_step(model, smashed_compress="topk",
+                                          max_local_steps=2, jit=True)
+            b = jax.tree.map(lambda t: jnp.stack([t] * 2), batch)
+        else:
+            step = rounds.make_train_step(model, smashed_compress="topk",
+                                          jit=True)
+            b = batch
+        state, _ = step(params, state, b, w, jnp.asarray(active), lr, lr)
+        return np.asarray(state["smashed_ef"])
+
+    for local_steps in (False, True):
+        ef = ef_after([1.0, 0.0], local_steps)
+        assert np.abs(ef[0]).max() > 0          # active client accumulated
+        np.testing.assert_array_equal(ef[1], 0)  # dropped client untouched
+
+
+def test_smashed_ef_residual_updates_at_boundary():
+    """Unit check of the stateful EF boundary: at the cut layer,
+    y + residual' == x + residual (nothing lost), and only the cut
+    client's rows change."""
+    from repro.core import smashed
+
+    c = smashed.make_compressor("topk", topk_frac=0.25)
+    n, b, s, d = 2, 2, 4, 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, b, s, d))
+    resid = jax.random.normal(jax.random.PRNGKey(1), (n, b, s, d)) * 0.1
+    hook = smashed.make_boundary(c, jnp.asarray([2, 3]), residual=resid)
+    assert hook.stateful
+    carry = hook.init()
+    y, carry = hook(x, carry, jnp.int32(1))   # cut-1 for client 0 only
+    xn, yn, cn, rn = map(np.asarray, (x, y, carry, resid))
+    # client 1 untouched at this layer
+    np.testing.assert_array_equal(yn[1], xn[1])
+    np.testing.assert_array_equal(cn[1], 0.0)
+    # client 0: compressed message + residual' reconstructs x + residual
+    np.testing.assert_allclose(yn[0] + cn[0], xn[0] + rn[0],
+                               rtol=1e-5, atol=1e-6)
+    # and the message really is sparse
+    assert (yn[0] == 0).mean() > 0.5
