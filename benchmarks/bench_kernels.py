@@ -1,7 +1,21 @@
-"""Kernel microbenchmarks (CPU: jnp reference path timings; the Pallas
-kernels are TPU-targeted and validated in interpret mode by the tests).
+"""Kernel microbenchmarks, forward AND backward.
+
+Fine-tuning is backward-dominated, so the two training hot paths
+(lora_matmul, flash_attention) are timed in both directions:
+
+  <name>_fwd  — one forward call
+  <name>_bwd  — the backward alone: time(value_and_grad) - time(forward),
+                i.e. the cost the custom_vjp adds on top of the forward.
+
+On TPU both directions dispatch to the Pallas kernels (the bwd rows
+exercise the new backward kernels); on CPU they time the jnp oracle paths
+(the Pallas kernels are validated in interpret mode by tests/test_grads.py).
+The grads are taken w.r.t. the trainable operands only (x + adapters for
+LoRA under lora_only, q/k/v for attention) — matching what the round
+engine differentiates.
 
 us_per_call = wall time per op; derived = achieved GFLOP/s on this host.
+Under BENCH_DRYRUN=1 the shapes shrink to collection-test scale.
 """
 
 from __future__ import annotations
@@ -12,6 +26,7 @@ from typing import List
 import jax
 import jax.numpy as jnp
 
+from benchmarks.common import DRYRUN
 from repro.kernels.decode_attention import ops as dec_ops
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.lora_matmul import ops as lora_ops
@@ -28,48 +43,72 @@ def _time(fn, *args, iters: int = 5) -> float:
     return (time.time() - t0) / iters
 
 
+def _fwd_bwd_rows(name: str, fwd, grad_argnums, args, flops_fwd: float,
+                  flops_bwd: float) -> List[dict]:
+    """Two rows: forward, and backward-only (value_and_grad minus fwd)."""
+    f = jax.jit(fwd)
+    vag = jax.jit(jax.value_and_grad(
+        lambda *t: jnp.sum(fwd(*t)), argnums=grad_argnums))
+    t_f = _time(f, *args)
+    t_vag = _time(vag, *args)
+    t_b = max(t_vag - t_f, 1e-9)
+    return [
+        {"name": f"{name}_fwd", "us_per_call": t_f * 1e6,
+         "derived": flops_fwd / t_f / 1e9},
+        {"name": f"{name}_bwd", "us_per_call": t_b * 1e6,
+         "derived": flops_bwd / t_b / 1e9},
+    ]
+
+
 def run() -> List[dict]:
     key = jax.random.PRNGKey(0)
     rows = []
 
-    # fused LoRA matmul
-    m, k, n, r = 512, 1024, 1024, 16
+    # fused LoRA matmul: fwd + bwd (dx/dA/dB under lora_only — the
+    # fine-tuning hot path; the frozen-base dW is skipped by design)
+    m, k, n, r = (128, 256, 256, 8) if DRYRUN else (512, 1024, 1024, 16)
     ks = jax.random.split(key, 4)
     x = jax.random.normal(ks[0], (m, k))
     w = jax.random.normal(ks[1], (k, n)) * 0.02
     a = jax.random.normal(ks[2], (k, r)) * 0.02
     b = jax.random.normal(ks[3], (r, n)) * 0.02
-    f = jax.jit(lambda *t: lora_ops.lora_matmul(*t, jnp.float32(0.5)))
-    dt = _time(f, x, w, a, b)
-    flops = 2 * m * k * n + 2 * m * r * (k + n)
-    rows.append({"name": f"kernels/lora_matmul_{m}x{k}x{n}",
-                 "us_per_call": dt * 1e6, "derived": flops / dt / 1e9})
+    flops_fwd = 2 * m * k * n + 2 * m * r * (k + n)
+    # bwd: dx = g W^T + s gb A^T (2MKN + 2Mr(N+K)); dA/dB thin (2Mr(K+N))
+    flops_bwd = 2 * m * k * n + 4 * m * r * (k + n)
+    rows += _fwd_bwd_rows(
+        f"kernels/lora_matmul_{m}x{k}x{n}",
+        lambda x_, a_, b_: lora_ops.lora_matmul(
+            x_, w, a_, b_, jnp.float32(0.5), lora_only=True),
+        (0, 1, 2), (x, a, b), flops_fwd, flops_bwd)
 
-    # flash attention (ref path) and chunked path
-    bsz, s, h, hd = 2, 1024, 8, 64
+    # flash attention: fwd + bwd (dQ/dK/dV from saved out+lse residuals)
+    bsz, s, h, hd = (1, 256, 4, 64) if DRYRUN else (2, 1024, 8, 64)
     q = jax.random.normal(ks[0], (bsz, s, h, hd))
     kk = jax.random.normal(ks[1], (bsz, s, h // 2, hd))
     v = jax.random.normal(ks[2], (bsz, s, h // 2, hd))
-    f = jax.jit(lambda *t: fa_ops.flash_attention(*t))
-    dt = _time(f, q, kk, v)
-    flops = 4 * bsz * h * s * s * hd // 2   # causal
-    rows.append({"name": f"kernels/flash_attention_s{s}",
-                 "us_per_call": dt * 1e6, "derived": flops / dt / 1e9})
+    flops_attn = 4 * bsz * h * s * s * hd // 2   # causal
+    # bwd recomputes p and runs 4 more matmuls of the same shape
+    rows += _fwd_bwd_rows(
+        f"kernels/flash_attention_s{s}",
+        lambda *t: fa_ops.flash_attention(*t),
+        (0, 1, 2), (q, kk, v), flops_attn, 2 * flops_attn)
 
-    # decode attention
+    # decode attention (inference-only: no bwd path)
+    dec_s = 512 if DRYRUN else 4096
     q1 = jax.random.normal(ks[0], (8, h, hd))
-    kc = jax.random.normal(ks[1], (8, 4096, h // 2, hd))
-    vc = jax.random.normal(ks[2], (8, 4096, h // 2, hd))
-    clen = jnp.full((8,), 4096, jnp.int32)
+    kc = jax.random.normal(ks[1], (8, dec_s, h // 2, hd))
+    vc = jax.random.normal(ks[2], (8, dec_s, h // 2, hd))
+    clen = jnp.full((8,), dec_s, jnp.int32)
     f = jax.jit(lambda *t: dec_ops.decode_attention(*t))
     dt = _time(f, q1, kc, vc, clen)
     bytes_moved = 2 * kc.size * 4
-    rows.append({"name": "kernels/decode_attention_s4096",
+    rows.append({"name": f"kernels/decode_attention_s{dec_s}",
                  "us_per_call": dt * 1e6,
                  "derived": bytes_moved / dt / 1e9})
 
     # SSD scan
-    bs, ss, hh, pp, g, nn = 2, 512, 8, 64, 1, 64
+    bs, ss, hh, pp, g, nn = (1, 128, 4, 32, 1, 32) if DRYRUN else \
+        (2, 512, 8, 64, 1, 64)
     x2 = jax.random.normal(ks[0], (bs, ss, hh, pp))
     dtp = jax.nn.softplus(jax.random.normal(ks[1], (bs, ss, hh)))
     aa = -jnp.exp(jax.random.normal(ks[2], (hh,)) * 0.5)

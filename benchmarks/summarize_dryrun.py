@@ -1,4 +1,4 @@
-"""Turn results/dryrun.json into the EXPERIMENTS.md roofline tables.
+"""Turn results/dryrun.json into markdown roofline tables.
 
   PYTHONPATH=src python -m benchmarks.summarize_dryrun [results/dryrun.json]
 """

@@ -6,9 +6,17 @@ Dispatch policy (shared by all kernels in repro.kernels):
   * otherwise (CPU/GPU)         -> ref.py jnp oracle
 
 The wrapper owns shape management (flattening batch dims, padding to block
-multiples) and the custom VJP.  The backward pass is expressed in jnp —
-XLA fuses it well, and it reuses the forward's residuals; a Pallas backward
-is a recorded possible extension in EXPERIMENTS.md §Perf.
+multiples) and the custom VJP.  Forward and backward are both Pallas on
+the kernel path: the forward saves the fp32 (M, r) intermediate xa as a
+residual, and the backward computes dx / dA / dB / dscale with the fused
+kernels in kernel.py instead of re-deriving them in jnp.  The oracle path
+keeps the jnp backward — it is the numerical contract the kernels are
+tested against (tests/test_grads.py).
+
+lora_only=True (the fine-tuning hot path: base weights frozen, only the
+adapters train) skips the dW = x^T g term entirely — the frozen-base
+gradient, the single largest backward tensor, is never materialized; the
+cotangent returned for W is a symbolic zero that XLA dead-code-eliminates.
 """
 
 from __future__ import annotations
@@ -20,7 +28,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.lora_matmul import ref
-from repro.kernels.lora_matmul.kernel import lora_matmul_pallas
+from repro.kernels.lora_matmul.kernel import (lora_matmul_bwd_pallas,
+                                              lora_matmul_pallas)
 
 
 def _use_pallas() -> bool:
@@ -46,45 +55,72 @@ def _pad_to(x, mult, axis):
     return jnp.pad(x, widths), size
 
 
+def _divisor_block(dim: int, candidates) -> int:
+    for c in candidates:
+        if dim % c == 0:
+            return c
+    return dim
+
+
+def _blocks_for(m: int, n: int, k_dim: int):
+    bm = 256 if m >= 256 else max(8, 1 << (m - 1).bit_length())
+    bn = _divisor_block(n, (256, 128))
+    bk = _divisor_block(k_dim, (512, 256, 128))
+    return bm, bn, bk
+
+
 def _pallas_path(x, w, a, b, scale):
-    """Flatten leading dims, pad every dim to MXU-aligned blocks, call."""
+    """Flatten leading dims, pad every dim to MXU-aligned blocks, call.
+
+    Returns (y (*lead, N), xa (M, r_pad) fp32) — xa rows are the original
+    (unpadded) tokens in kernel layout, the backward residual."""
     *lead, k_dim = x.shape
     n = w.shape[1]
-    r = a.shape[1]
     x2 = x.reshape(-1, k_dim)
     m = x2.shape[0]
 
-    bm = 256 if m >= 256 else max(8, 1 << (m - 1).bit_length())
-    bn = min(256, n) if n % 128 == 0 else n
-    bk = min(512, k_dim) if k_dim % 128 == 0 else k_dim
+    bm, bn, bk = _blocks_for(m, n, k_dim)
 
     x2, m0 = _pad_to(x2, bm, 0)
     # pad rank to the fp32 sublane multiple so (bk, r)/(r, bn) tiles are legal
     a_p, _ = _pad_to(a, 8, 1)
     b_p, _ = _pad_to(b, 8, 0)
 
-    y = lora_matmul_pallas(x2, w, a_p, b_p, scale, bm=bm,
-                           bn=min(bn, n), bk=min(bk, k_dim),
-                           interpret=_interpret())
-    y = y[:m0]
-    return y.reshape(*lead, n)
+    y, xa = lora_matmul_pallas(x2, w, a_p, b_p, scale, bm=bm, bn=bn, bk=bk,
+                               interpret=_interpret())
+    return y[:m0].reshape(*lead, n), xa[:m0]
 
 
-@jax.custom_vjp
-def lora_matmul(x, w, a, b, scale):
-    """y = x @ W + scale * (x @ A) @ B with fused-kernel forward on TPU."""
-    if _use_pallas():
-        return _pallas_path(x, w, a, b, scale)
-    return ref.lora_matmul(x, w, a, b, scale)
+def _pallas_bwd_path(x, w, a, b, scale, g, xa):
+    """Fused Pallas backward (see kernel.py).  xa: (M, r_pad) fp32 residual
+    from _pallas_path.  Returns (dx, da, db, dscale) in primal dtypes."""
+    *lead, k_dim = x.shape
+    n = w.shape[1]
+    r = a.shape[1]
+    x2 = x.reshape(-1, k_dim)
+    g2 = g.reshape(-1, n)
+    m = x2.shape[0]
+
+    bm, bn, bk = _blocks_for(m, n, k_dim)
+
+    x2, m0 = _pad_to(x2, bm, 0)
+    g2, _ = _pad_to(g2, bm, 0)
+    xa_p, _ = _pad_to(xa, bm, 0)
+    a_p, _ = _pad_to(a, 8, 1)
+    b_p, _ = _pad_to(b, 8, 0)
+
+    dx, da, db, dscale = lora_matmul_bwd_pallas(
+        x2, w, a_p, b_p, scale, g2, xa_p, bm=bm, bn=bn, bk=bk,
+        interpret=_interpret())
+    dx = dx[:m0].reshape(*lead, k_dim)
+    # padded rank rows/cols of A/B are zero, so their gradient slices are
+    # exactly zero — slicing them off loses nothing
+    return (dx, da[:, :r].astype(a.dtype), db[:r].astype(b.dtype),
+            dscale.astype(scale.dtype))
 
 
-def _fwd(x, w, a, b, scale):
-    y = lora_matmul(x, w, a, b, scale)
-    return y, (x, w, a, b, scale)
-
-
-def _bwd(res, g):
-    x, w, a, b, scale = res
+def _jnp_bwd(x, w, a, b, scale, g, *, lora_only: bool):
+    """The jnp oracle backward (also the CPU/GPU execution path)."""
     gf = g.astype(jnp.float32)
     xf = x.astype(jnp.float32)
     s = scale.astype(jnp.float32)
@@ -92,16 +128,59 @@ def _bwd(res, g):
     gb = jnp.einsum("...n,rn->...r", gf, b.astype(jnp.float32))
     dx = (jnp.einsum("...n,kn->...k", gf, w.astype(jnp.float32))
           + s * jnp.einsum("...r,kr->...k", gb, a.astype(jnp.float32)))
-    # dW = x^T g   (frozen base: still returned; caller masks if lora_only)
-    dw = jnp.einsum("...k,...n->kn", xf, gf)
     # dA = s x^T (g B^T);  dB = s (x A)^T g
     da = s * jnp.einsum("...k,...r->kr", xf, gb)
     xa = jnp.einsum("...k,kr->...r", xf, a.astype(jnp.float32))
     db = s * jnp.einsum("...r,...n->rn", xa, gf)
-    dscale = jnp.sum(jnp.einsum("...r,rn->...n", xa, b.astype(jnp.float32))
-                     * gf).astype(scale.dtype)
-    return (dx.astype(x.dtype), dw.astype(w.dtype), da.astype(a.dtype),
-            db.astype(b.dtype), dscale)
+    dscale = jnp.sum(xa * gb).astype(scale.dtype)
+    if lora_only:
+        dw = jnp.zeros_like(w)
+    else:
+        dw = jnp.einsum("...k,...n->kn", xf, gf).astype(w.dtype)
+    return (dx.astype(x.dtype), dw, da.astype(a.dtype), db.astype(b.dtype),
+            dscale)
 
 
-lora_matmul.defvjp(_fwd, _bwd)
+@functools.lru_cache(maxsize=2)
+def _make_lora(lora_only: bool):
+    """Build the custom_vjp fn for one dW policy (two cached instances)."""
+
+    @jax.custom_vjp
+    def f(x, w, a, b, scale):
+        if _use_pallas():
+            return _pallas_path(x, w, a, b, scale)[0]
+        return ref.lora_matmul(x, w, a, b, scale)
+
+    def fwd(x, w, a, b, scale):
+        if _use_pallas():
+            y, xa = _pallas_path(x, w, a, b, scale)
+        else:
+            y = ref.lora_matmul(x, w, a, b, scale)
+            xa = None
+        return y, (x, w, a, b, scale, xa)
+
+    def bwd(res, g):
+        x, w, a, b, scale, xa = res
+        if xa is not None and _use_pallas():
+            dx, da, db, dscale = _pallas_bwd_path(x, w, a, b, scale, g, xa)
+            if lora_only:
+                # symbolic zero: never computed, DCE'd when unused
+                dw = jnp.zeros_like(w)
+            else:
+                dw = jnp.einsum("...k,...n->kn", x.astype(jnp.float32),
+                                g.astype(jnp.float32)).astype(w.dtype)
+            return dx, dw, da, db, dscale
+        return _jnp_bwd(x, w, a, b, scale, g, lora_only=lora_only)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def lora_matmul(x, w, a, b, scale, *, lora_only: bool = False):
+    """y = x @ W + scale * (x @ A) @ B with fused-kernel forward/backward
+    on TPU.
+
+    lora_only=True declares W frozen: its cotangent is a symbolic zero and
+    the dW matmul is skipped (use from training code where only the
+    adapters receive gradient)."""
+    return _make_lora(bool(lora_only))(x, w, a, b, scale)

@@ -13,7 +13,8 @@ Usage:
       --shape train_4k --multi-pod --json out.json
 
 Per cell it prints memory_analysis() (proves the cell fits a 16 GB v5e
-chip) and cost_analysis() (FLOPs/bytes feeding EXPERIMENTS.md §Roofline).
+chip) and cost_analysis() (FLOPs/bytes feeding the roofline tables of
+benchmarks/summarize_dryrun.py and bench_roofline.py).
 Sharding mismatches, compile-time OOM or unsupported collectives here are
 bugs in the framework, not in the harness.
 """

@@ -246,11 +246,14 @@ def init_lora(key, d_in: int, d_out: int, r: int, alpha: float,
 
 
 def lora_dense(x, w, b=None, adapter: Optional[Params] = None):
-    """y = x @ W (+ b) (+ scale * (x @ A) @ B)."""
+    """y = x @ W (+ b) (+ scale * (x @ A) @ B).
+
+    lora_only: base weights are frozen in this codebase (LoRA fine-tuning),
+    so the dW = x^T g backward term is skipped entirely."""
     from repro.kernels.lora_matmul import ops as lora_ops
     if adapter is not None:
         y = lora_ops.lora_matmul(x, w, adapter["A"], adapter["B"],
-                                 adapter["scale"])
+                                 adapter["scale"], lora_only=True)
     else:
         y = x @ w
     if b is not None:

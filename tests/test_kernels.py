@@ -53,11 +53,15 @@ def test_lora_matmul_shapes(m, k, n, r, dtype):
     a = (jax.random.normal(ks[2], (k, r)) * 0.05).astype(dtype)
     b = (jax.random.normal(ks[3], (r, n)) * 0.05).astype(dtype)
     s = jnp.float32(0.5)
-    got = lora_matmul_pallas(x, w, a, b, s, bm=128, bn=128, bk=128,
-                             interpret=True)
+    got, xa = lora_matmul_pallas(x, w, a, b, s, bm=128, bn=128, bk=128,
+                                 interpret=True)
     want = lora_ref.lora_matmul(x, w, a, b, s)
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), **tol(dtype))
+    # the fp32 residual the backward reuses
+    want_xa = x.astype(jnp.float32) @ a.astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(xa), np.asarray(want_xa),
+                               **tol(dtype))
 
 
 def test_lora_matmul_vjp_matches_ref():

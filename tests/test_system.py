@@ -14,7 +14,9 @@ from repro.checkpoint import CheckpointManager, load_checkpoint, \
     save_checkpoint
 from repro.config import reduced
 from repro.configs import get_config
+from repro.core import rounds
 from repro.core.system import SplitFTSystem, SystemConfig
+from repro.models.model import build_model
 from repro.runtime.straggler import SpeedModel, deadline_survivors
 
 
@@ -157,6 +159,52 @@ def test_serve_model_after_training():
     lg, cache = model.decode_step(params, adapters,
                                   jnp.ones((2, 1), jnp.int32), cache)
     assert bool(jnp.all(jnp.isfinite(lg)))
+
+
+def test_train_step_interpret_matches_jnp_backward(monkeypatch):
+    """End-to-end numerics guard for the kernel backward path: one full
+    make_train_step round with every custom_vjp dispatched through the
+    Pallas kernels (interpret mode) must match the jnp-oracle round within
+    tolerance on gpt2_small.  Kernel backward changes can never silently
+    shift round-engine numerics past this digest."""
+    arch = small_arch()
+    model = build_model(arch)
+    n = 3
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key)
+    v = arch.model.vocab_size
+    bk = jax.random.PRNGKey(7)
+    batch = {"tokens": jax.random.randint(bk, (n, 4, 64), 3, v),
+             "labels": jax.random.randint(bk, (n, 4, 64), 3, v),
+             "loss_mask": jnp.ones((n, 4, 64), jnp.float32)}
+    w = jnp.ones(n) / n
+    act = jnp.ones(n)
+    lr = jnp.float32(3e-3)
+
+    def one_round(interpret: bool):
+        if interpret:
+            monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+        else:
+            monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+        state = rounds.init_state(model, key, num_clients=n)
+        step = rounds.make_train_step(model, jit=True)
+        state, metrics = step(params, state, batch, w, act, lr, lr)
+        return state, metrics
+
+    s_jnp, m_jnp = one_round(False)
+    s_pls, m_pls = one_round(True)
+
+    np.testing.assert_allclose(np.asarray(m_pls["total"]),
+                               np.asarray(m_jnp["total"]),
+                               rtol=1e-5, atol=1e-5)
+    for part in ("client_adapters", "server_adapters"):
+        for (pa, la), (pb, lb) in zip(
+                jax.tree_util.tree_leaves_with_path(s_pls[part]),
+                jax.tree_util.tree_leaves_with_path(s_jnp[part])):
+            assert pa == pb
+            np.testing.assert_allclose(
+                np.asarray(la), np.asarray(lb), rtol=5e-4, atol=5e-5,
+                err_msg=f"{part}{jax.tree_util.keystr(pa)}")
 
 
 def test_noniid_partition_affects_client_data():
