@@ -244,11 +244,15 @@ class SplitConfig:
     smashed_compress: str = "none"
     smashed_topk_frac: float = 0.1      # kept fraction for the topk scheme
     # Round scheduler (repro.core.scheduler): sync (paper Algorithm 1) |
-    # deadline (straggler drop) | local_steps (speed-proportional K_i).
+    # deadline (straggler drop) | local_steps (speed-proportional K_i) |
+    # async (FedBuff-style buffered asynchrony, no barrier).
     # SystemConfig.scheduler overrides per run.
     scheduler: str = "sync"
     max_local_steps: int = 4            # static K cap for local_steps
     deadline_frac: float = 1.5          # drop threshold for deadline
+    async_buffer_size: int = 2          # async: aggregate every M distinct
+                                        # client completions (clamped to N)
+    staleness_power: float = 0.5        # async: (1+staleness)^-p discount
 
     def buckets(self, num_layers: int) -> Tuple[int, ...]:
         if self.cut_buckets:

@@ -15,7 +15,7 @@ mask-based split: any bucket assignment runs in the same executable.
 
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -32,7 +32,8 @@ def update_weights(accs: Sequence[float], gamma: float) -> np.ndarray:
 def adjust_cuts(cuts: Sequence[int], accs: Sequence[float],
                 split: SplitConfig, num_layers: int, *,
                 dead_band: float = 0.002,
-                round_times: Sequence[float] = None) -> np.ndarray:
+                round_times: Optional[Sequence[float]] = None
+                ) -> np.ndarray:
     """One adjustment step.  Returns the new cut array.
 
     Accuracy drives direction (paper rule); if round_times are provided,

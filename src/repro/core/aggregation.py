@@ -16,6 +16,13 @@ start, so its weight is divided by K before renormalization — FedNova-
 style objective-consistency normalization, composed multiplicatively with
 the paper's C3 x |D_i| weights.
 
+`staleness_i` (optional; used by the async/buffered scheduler) is how
+many global versions behind client i's base adapters were when its update
+entered the server buffer.  A FedBuff-style discount
+(1 + staleness)^-power multiplies the weight — fresh updates count fully,
+stale ones fade smoothly — composed multiplicatively with the step
+normalization above.
+
 After aggregation every client's row is refreshed: owned layers get the
 aggregate (paper b3); dormant rows mirror the server adapters so that a
 future cut increase hands the layer over seamlessly (the generalization
@@ -39,17 +46,32 @@ from repro.models.model import Model
 Params = Dict[str, Any]
 
 
+def staleness_discount(staleness, *, power: float = 0.5):
+    """FedBuff-style staleness weight (1 + s)^-power.
+
+    1 at s = 0, in (0, 1], and monotone non-increasing in s — pinned by
+    tests/test_scheduler_equiv.py.  power=0.5 is the 1/sqrt(1+s) rule from
+    the FedBuff paper; power=0 disables discounting."""
+    s = jnp.maximum(jnp.asarray(staleness, jnp.float32), 0.0)
+    return (1.0 + s) ** jnp.float32(-power)
+
+
 def fedavg(model: Model, client_adapters: Params, cuts, weights,
-           active, steps=None) -> Params:
+           active, steps=None, staleness=None,
+           staleness_power: float = 0.5) -> Params:
     """Aggregate: returns the rank-2 (per-layer, no client axis) tree.
 
     steps: optional (N,) effective local-step counts; weights are divided
-    by them (step-count normalization, see module docstring)."""
+    by them (step-count normalization, see module docstring).
+    staleness: optional (N,) version lags; weights are multiplied by
+    staleness_discount (async/buffered scheduler, see module docstring)."""
     masks = client_layer_masks(model.num_flat_layers, cuts)     # (N, M)
     w = (jnp.asarray(weights, jnp.float32)
          * jnp.asarray(active, jnp.float32))
     if steps is not None:
         w = w / jnp.maximum(jnp.asarray(steps, jnp.float32), 1.0)
+    if staleness is not None:
+        w = w * staleness_discount(staleness, power=staleness_power)
 
     out: Params = {}
     for gname, targets in client_adapters.items():
@@ -69,8 +91,14 @@ def fedavg(model: Model, client_adapters: Params, cuts, weights,
 
 def broadcast_after_agg(model: Model, client_adapters: Params,
                         aggregated: Params, server_adapters: Params,
-                        cuts) -> Params:
-    """Refresh client rows: owned layers <- aggregate; dormant <- server."""
+                        cuts, recv_mask=None) -> Params:
+    """Refresh client rows: owned layers <- aggregate; dormant <- server.
+
+    recv_mask: optional (N,) {0,1} — which clients receive the b3
+    broadcast.  The barrier schedulers re-sync everyone each round
+    (recv_mask=None); the async scheduler refreshes only the clients whose
+    updates were just folded into the buffer — in-flight clients keep
+    training on their stale rows, which is the point of FedBuff."""
     masks = client_layer_masks(model.num_flat_layers, cuts)
     gmasks = group_masks(model, masks)                          # (Lg,N,1,1)
 
@@ -81,10 +109,13 @@ def broadcast_after_agg(model: Model, client_adapters: Params,
         for tname, ad in targets.items():
             agg = aggregated[gname][tname]
             srv = server_adapters[gname][tname]
-            out[gname][tname] = {
-                "A": m * agg["A"][:, None] + (1 - m) * srv["A"][:, None],
-                "B": m * agg["B"][:, None] + (1 - m) * srv["B"][:, None],
-            }
+            new_a = m * agg["A"][:, None] + (1 - m) * srv["A"][:, None]
+            new_b = m * agg["B"][:, None] + (1 - m) * srv["B"][:, None]
+            if recv_mask is not None:
+                rm = recv_mask.reshape((1, -1) + (1,) * (new_a.ndim - 2))
+                new_a = jnp.where(rm > 0, new_a, ad["A"])
+                new_b = jnp.where(rm > 0, new_b, ad["B"])
+            out[gname][tname] = {"A": new_a, "B": new_b}
     return out
 
 

@@ -24,6 +24,18 @@ residuals freeze for k >= budgets[i]), while FedAvg stays at the round
 boundary.  max_local_steps == 1 is exactly the pre-scheduler lockstep
 step, bit-for-bit.
 
+`async_buffer=True` selects the FedBuff-style buffered engine: one call =
+one *event tick* (the clients finishing a local step at the same
+simulated instant, chosen by the host's event queue), not one barrier
+round.  Completed updates accumulate in a server-side buffer
+(state["buffer_mask"]); when the buffer reaches `buffer_size` the engine
+aggregates with staleness-discounted, step-normalized weights and
+re-broadcasts to the *buffered* clients only — in-flight clients keep
+training on stale adapters (state["adapter_version"] tracks which global
+version each row descends from).  Buffer fill, staleness and versions are
+all arrays in state, so the tick executable never recompiles as events
+fire.
+
 Heterogeneous per-client cuts, rank policy, adaptive movement, elastic
 membership and step budgets are all *data* (mask arrays) — one executable
 covers every configuration (DESIGN.md §3).
@@ -85,6 +97,8 @@ def make_train_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
                     smashed_compress: str = "none",
                     smashed_topk_frac: float = 0.1,
                     max_local_steps: int = 1,
+                    async_buffer: bool = False, buffer_size: int = 2,
+                    staleness_power: float = 0.5,
                     jit: bool = True):
     """Build the jitted round step.
 
@@ -114,7 +128,15 @@ def make_train_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
     FedAvg happens once, at the round boundary, with weights divided by
     each client's effective step count (aggregation.fedavg `steps`) so
     extra local steps do not bias the global adapter.  K == 1 is exactly
-    the pre-scheduler lockstep path."""
+    the pre-scheduler lockstep path.
+
+    async_buffer=True selects the FedBuff event-tick engine (see module
+    docstring): `active` becomes the set of clients *finishing* at this
+    simulated instant, state must carry the buffer/version arrays
+    (with_async_buffer) and per-client optimizer step counts
+    (with_per_client_opt_steps), and aggregation fires inside the tick
+    only when the buffer reaches `buffer_size`, discounting each buffered
+    update by staleness_discount(staleness, power=staleness_power)."""
     arch = model.arch
     opt = _optimizer_of(arch)
     smasher = smashed_lib.make_compressor(smashed_compress,
@@ -125,6 +147,25 @@ def make_train_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
     if max_local_steps > 1 and microbatch > 1:
         raise ValueError("the local-steps engine does not compose with "
                          "microbatch accumulation yet")
+    if async_buffer:
+        if max_local_steps > 1 or microbatch > 1:
+            raise ValueError("the async engine runs one local step per "
+                             "event tick; it does not compose with "
+                             "max_local_steps or microbatch")
+        if compress != "none":
+            raise ValueError("adapter-delta compression (topk/int8) is "
+                             "not yet composed with async buffering; use "
+                             "compress='none'")
+        if agg_every != 1:
+            raise ValueError("async buffering replaces agg_every: the "
+                             "buffer fill decides when to aggregate")
+        if buffer_size < 1:
+            raise ValueError(f"buffer_size must be >= 1, got "
+                             f"{buffer_size}")
+        return _make_async_step(
+            model, opt, smasher, policy=policy, remat=remat,
+            ce_chunk=ce_chunk, buffer_size=buffer_size,
+            staleness_power=staleness_power, jit=jit)
 
     if max_local_steps > 1:
         return _make_local_steps_step(
@@ -387,6 +428,132 @@ def _make_local_steps_step(model: Model, opt, smasher, *, policy, remat,
     return step
 
 
+# ---------------------------------------------------------------------------
+# async buffered engine (scheduler == "async", FedBuff-style)
+
+
+def _make_async_step(model: Model, opt, smasher, *, policy, remat,
+                     ce_chunk, buffer_size: int, staleness_power: float,
+                     jit: bool):
+    """One event tick of the buffered-asynchronous engine.
+
+    step(base_params, state, batch, weights, active, lr_c, lr_s)
+      -> (state', metrics)
+
+    active: (N,) {0,1} — the clients whose local step COMPLETES at this
+    simulated instant (the host event queue's current tick).  Their
+    adapter rows and optimizer slots advance one step; everyone else is
+    frozen (unlike the barrier engines there is no end-of-round broadcast
+    to squash drift, so freezing is mandatory).  The completions join the
+    server buffer; when fill >= buffer_size the buffered rows are FedAvg'd
+    with weights w_i * (1+staleness_i)^-p / steps_i and only the buffered
+    clients are re-synced to the new global adapters.
+
+    Extra metrics (all pre-aggregation): "buffer_fill", "buffer_mask",
+    "staleness", "aggregated" (whether this tick closed a round), and
+    "fleet_total" — the weights-averaged loss over the WHOLE fleet (every
+    client's current batch against its current, possibly stale, row).
+    The tick's training loss ("total") covers only the finishing clients,
+    which is the wrong quantity to compare against a barrier scheduler's
+    fleet-average round loss; records use fleet_total so loss curves stay
+    comparable across schedulers (same contract as the local-steps
+    engine's first-inner-step metrics).  state["round"] counts
+    aggregations, not ticks."""
+    M = buffer_size
+
+    def step(base_params, state, batch, weights, active, lr_c, lr_s):
+        cad, sad = state["client_adapters"], state["server_adapters"]
+        cuts = state["cuts"]
+        n = active.shape[0]
+        if M > n:
+            raise ValueError(
+                f"buffer_size={M} can never fill: only {n} distinct "
+                "clients exist; clamp it to the fleet size")
+        sm_ef = state.get("smashed_ef")
+        wl = weights * active
+        wl = wl / jnp.maximum(jnp.sum(wl), 1e-9)
+        boundary = smashed_lib.make_boundary(smasher, cuts, residual=sm_ef)
+
+        def loss_fn(cad_, sad_, mb):
+            eff = split.merge_adapters(model, cad_, sad_, cuts)
+            per_loss, metrics = model.loss(
+                base_params, eff, mb, policy=policy, remat=remat,
+                ce_chunk=ce_chunk, per_client=True, boundary=boundary)
+            total = jnp.sum(wl * per_loss)
+            return total, (per_loss, metrics)
+
+        grad_fn = jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)
+        (total, (per_loss, metrics)), (g_cad, g_sad) = grad_fn(cad, sad,
+                                                               batch)
+        wf = weights / jnp.maximum(jnp.sum(weights), 1e-9)
+        fleet_total = jnp.sum(wf * per_loss)
+
+        metrics = dict(metrics)
+        new_sm_ef = metrics.pop("smashed_ef", None)
+        if new_sm_ef is not None:
+            m = active.reshape((-1,) + (1,) * (new_sm_ef.ndim - 1)) > 0
+            new_sm_ef = jnp.where(m, new_sm_ef, state["smashed_ef"])
+
+        # only the finishing clients' rows/slots advance; the server side
+        # advances whenever anyone finishes (it co-trained with them)
+        new_cad, opt_c = opt.update(g_cad, state["opt_c"], cad, lr_c)
+        new_cad = _select_clients(active, new_cad, cad)
+        opt_c = _select_clients(active, opt_c, state["opt_c"])
+        new_sad, opt_s = opt.update(g_sad, state["opt_s"], sad, lr_s)
+        new_sad = _select_any(active, new_sad, sad)
+        opt_s = _select_any(active, opt_s, state["opt_s"])
+
+        # -- buffer bookkeeping (all data; no recompilation per event) ----
+        buf = jnp.clip(state["buffer_mask"] + active, 0.0, 1.0)
+        bsteps = state["buffer_steps"] + active
+        fill = jnp.sum(buf)
+        staleness = (state["global_version"]
+                     - state["adapter_version"]).astype(jnp.float32)
+        aggregate = fill >= M
+
+        def do_agg(operand):
+            cad_in, buf_, bsteps_, ver_, gver_ = operand
+            agg = aggregation.fedavg(
+                model, cad_in, cuts, weights, buf_,
+                steps=jnp.maximum(bsteps_, 1.0), staleness=staleness,
+                staleness_power=staleness_power)
+            out = aggregation.broadcast_after_agg(
+                model, cad_in, agg, new_sad, cuts, recv_mask=buf_)
+            new_gver = gver_ + 1
+            new_ver = jnp.where(buf_ > 0, new_gver, ver_)
+            return (out, jnp.zeros_like(buf_), bsteps_ * (1.0 - buf_),
+                    new_ver, new_gver)
+
+        def no_agg(operand):
+            return operand
+
+        new_cad, new_buf, new_bsteps, new_ver, new_gver = jax.lax.cond(
+            aggregate, do_agg, no_agg,
+            (new_cad, buf, bsteps, state["adapter_version"],
+             state["global_version"]))
+
+        new_state = dict(state)
+        new_state.update(client_adapters=new_cad, server_adapters=new_sad,
+                         opt_c=opt_c, opt_s=opt_s,
+                         buffer_mask=new_buf, buffer_steps=new_bsteps,
+                         adapter_version=new_ver, global_version=new_gver,
+                         round=state["round"]
+                         + aggregate.astype(jnp.int32))
+        if new_sm_ef is not None:
+            new_state["smashed_ef"] = new_sm_ef
+        metrics["total"] = total
+        metrics["fleet_total"] = fleet_total
+        metrics["buffer_fill"] = fill
+        metrics["buffer_mask"] = buf
+        metrics["staleness"] = staleness
+        metrics["aggregated"] = aggregate
+        return new_state, metrics
+
+    if jit:
+        return jax.jit(step, donate_argnums=(1,))
+    return step
+
+
 def make_eval_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
                    ce_chunk: int = 0, jit: bool = True):
     """Evaluate the GLOBAL model (paper b4) on per-client eval batches.
@@ -419,6 +586,54 @@ def with_step_budgets(state: Params) -> Params:
     state = dict(state)
     n = state["cuts"].shape[0]
     state["step_budgets"] = jnp.ones((n,), jnp.int32)
+    return state
+
+
+def with_async_buffer(state: Params) -> Params:
+    """Attach the FedBuff buffer/version arrays (needed before the
+    async_buffer=True engine).  All zeros: empty buffer, every client on
+    global version 0.  Lives in state so checkpoints round-trip a
+    mid-buffer snapshot bit-exactly."""
+    state = dict(state)
+    n = state["cuts"].shape[0]
+    state["buffer_mask"] = jnp.zeros((n,), jnp.float32)
+    state["buffer_steps"] = jnp.zeros((n,), jnp.float32)
+    state["adapter_version"] = jnp.zeros((n,), jnp.int32)
+    state["global_version"] = jnp.zeros((), jnp.int32)
+    return state
+
+
+def with_per_client_opt_steps(state: Params) -> Params:
+    """Vectorize the client optimizer's step counter to one count per
+    client ((N,), masked increments via _select_clients) so Adam's bias
+    correction tracks each client's ACTUAL number of steps.  Required for
+    the async engine; fixes the shared-count over-correction for
+    small-budget clients under local_steps (ROADMAP)."""
+    state = dict(state)
+    n = state["cuts"].shape[0]
+    opt_c = dict(state["opt_c"])
+    cnt = opt_c.get("count")
+    if cnt is not None and jnp.ndim(cnt) == 0:
+        opt_c["count"] = jnp.full((n,), cnt, jnp.int32)
+    state["opt_c"] = opt_c
+    return state
+
+
+def prepare_state(state: Params, *, max_local_steps: int = 1,
+                  async_buffer: bool = False) -> Params:
+    """Attach every scheduler-conditional state leaf in one place —
+    the single source of truth for the engine's state template, shared
+    by SplitFTSystem and the cell builders so the two paths can never
+    drift (a mismatch only surfaces later as a restore()/eval_shape
+    template error)."""
+    if max_local_steps > 1:
+        state = with_step_budgets(state)
+    if async_buffer:
+        state = with_async_buffer(state)
+    if max_local_steps > 1 or async_buffer:
+        # clients take unequal step counts inside a round: Adam's bias
+        # correction must track each client's own count
+        state = with_per_client_opt_steps(state)
     return state
 
 

@@ -20,35 +20,57 @@ round, plus the simulated wall-clock accounting the benchmarks report:
                of idling.  FedAvg weights are step-normalized (FedNova
                style) in aggregation.fedavg so extra steps do not bias the
                global adapter.
+  async        FedBuff-style buffered asynchrony: there is NO barrier.
+               Clients run free, each completion (an event on the
+               EventQueue's simulated clock) pushes the client's update
+               into a server buffer; when `buffer_size` distinct clients
+               have contributed, the server aggregates with staleness-
+               discounted weights ((1+s)^-power, aggregation.fedavg),
+               re-broadcasts to the contributors only, and bumps the
+               global version.  In-flight clients keep training on stale
+               adapters — the straggler tax becomes a staleness discount
+               instead of idle time.
 
-Schedulers are small, stateless policy objects; everything they decide is
-arrays in a `RoundPlan`, so the engine below them never recompiles when
-the policy changes its mind.
+The barrier schedulers are small, stateless policy objects; everything
+they decide is arrays in a `RoundPlan`, so the engine below them never
+recompiles when the policy changes its mind.  The async scheduler
+additionally owns the event-driven simulation state (the queue of
+per-client completion times, per-client launch counters and the
+per-round tick accounting); SplitFTSystem persists that state through
+checkpoint metadata so async runs resume mid-buffer bit-exactly.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.runtime.straggler import deadline_survivors, local_step_budgets
 
-SCHEDULERS = ("sync", "deadline", "local_steps")
+SCHEDULERS = ("sync", "deadline", "local_steps", "async")
 
 
 @dataclasses.dataclass
 class RoundPlan:
     """Everything the engine + accounting need for one round.
 
-    active:       (N,) float {0,1} — pool membership x scheduler survivors.
+    active:       (N,) float {0,1} — pool membership x scheduler survivors
+                  (async: the clients whose updates entered this round's
+                  aggregation buffer).
     step_budgets: (N,) int — local steps each client runs this round
-                  (0 for inactive clients; all-ones for sync/deadline).
+                  (0 for inactive clients; all-ones for sync/deadline;
+                  async: completions per client since the last
+                  aggregation).
     sim_time:     simulated wall-clock of this round (seconds); 0.0 when
                   no speed model is attached.
     times:        per-client one-step round-time estimates (or None).
     deadline:     the drop threshold, when the policy has one.
+    staleness:    (N,) version lag of each buffered update at aggregation
+                  time (async only).
+    buffer_fill:  number of distinct clients in the buffer when it
+                  flushed (async only; >= buffer_size by construction).
     """
 
     active: np.ndarray
@@ -56,6 +78,8 @@ class RoundPlan:
     sim_time: float
     times: Optional[np.ndarray] = None
     deadline: Optional[float] = None
+    staleness: Optional[np.ndarray] = None
+    buffer_fill: Optional[float] = None
 
 
 def _barrier_time(active: np.ndarray, times: Optional[np.ndarray]) -> float:
@@ -139,13 +163,140 @@ class LocalStepsScheduler(RoundScheduler):
                          times=times)
 
 
+class EventQueue:
+    """Event-driven simulated clock over per-client completion events.
+
+    Each in-flight client has one pending completion time; `pop_next`
+    advances the clock to the earliest pending completion and returns
+    every client finishing at that instant (ties within a relative
+    tolerance are batched into one tick, so a constant-speed fleet
+    reduces to lockstep rounds).  The clock is monotone non-decreasing —
+    pinned by tests/test_scheduler_equiv.py."""
+
+    def __init__(self, now: float = 0.0):
+        self.now = float(now)
+        self._pending: Dict[int, float] = {}
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def push(self, client: int, finish_time: float):
+        if finish_time < self.now:
+            raise ValueError(
+                f"completion at t={finish_time} is before the clock "
+                f"(t={self.now}); events cannot land in the past")
+        self._pending[int(client)] = float(finish_time)
+
+    def pop_next(self, *, tol: float = 1e-9) -> Tuple[float, List[int]]:
+        """(time, sorted clients) of the earliest completion tick."""
+        if not self._pending:
+            raise ValueError("no pending events (no clients in flight)")
+        t = min(self._pending.values())
+        eps = tol * max(1.0, abs(t))
+        who = sorted(c for c, ft in self._pending.items() if ft <= t + eps)
+        for c in who:
+            del self._pending[c]
+        self.now = max(self.now, t)
+        return t, who
+
+    # -- checkpoint round-trip (msgpack-friendly plain types) -----------
+    def state_dict(self) -> Dict:
+        return {"now": self.now,
+                "pending": {str(c): t for c, t in self._pending.items()}}
+
+    @classmethod
+    def from_state_dict(cls, d: Dict) -> "EventQueue":
+        q = cls(now=float(d.get("now", 0.0)))
+        q._pending = {int(c): float(t)
+                      for c, t in (d.get("pending") or {}).items()}
+        return q
+
+
+class AsyncScheduler(RoundScheduler):
+    """FedBuff-style buffered asynchrony (see module docstring).
+
+    Unlike the barrier policies this scheduler is *stateful*: it owns the
+    event queue (per-client completion times on the simulated clock),
+    per-client launch counters (which local round each client is running,
+    also the client's deterministic batch index), and the per-round tick
+    accounting.  The authoritative buffer/version arrays live in engine
+    state (rounds.with_async_buffer) so they checkpoint with the model;
+    the host-side pieces here round-trip via state_dict()."""
+
+    name = "async"
+    needs_speed = True
+
+    def __init__(self, *, buffer_size: int = 2,
+                 staleness_power: float = 0.5):
+        if buffer_size < 1:
+            raise ValueError(
+                f"buffer_size must be >= 1, got {buffer_size}")
+        if staleness_power < 0:
+            raise ValueError(f"staleness_power must be >= 0, got "
+                             f"{staleness_power}")
+        self.buffer_size = buffer_size
+        self.staleness_power = staleness_power
+        self.queue: Optional[EventQueue] = None
+        self.launches: Optional[np.ndarray] = None   # (N,) int
+        self.round_steps: Optional[np.ndarray] = None  # ticks since agg
+        self.last_agg_clock = 0.0
+        # clients whose completion flushed the buffer: they relaunch only
+        # AFTER the round epilogue (C3 may move their cut, which changes
+        # their next completion time — and they are exactly the clients
+        # that just received the new global model)
+        self.pending_relaunch: List[int] = []
+
+    @property
+    def started(self) -> bool:
+        return self.queue is not None
+
+    def start(self, num_clients: int, *, clock: float = 0.0):
+        """Reset the simulation: all clients about to launch round 0."""
+        self.queue = EventQueue(now=clock)
+        self.launches = np.zeros(num_clients, np.int64)
+        self.round_steps = np.zeros(num_clients, np.int64)
+        self.last_agg_clock = float(clock)
+        self.pending_relaunch = []
+
+    def plan(self, *, active, times=None, round_idx: int = 0) -> RoundPlan:
+        raise NotImplementedError(
+            "the async scheduler has no per-round barrier plan; "
+            "SplitFTSystem drives it through the event-queue host loop")
+
+    # -- checkpoint round-trip ------------------------------------------
+    def state_dict(self) -> Dict:
+        if not self.started:
+            return {}
+        return {
+            "queue": self.queue.state_dict(),
+            "launches": self.launches.tolist(),
+            "round_steps": self.round_steps.tolist(),
+            "last_agg_clock": self.last_agg_clock,
+            "pending_relaunch": list(self.pending_relaunch),
+        }
+
+    def load_state_dict(self, d: Dict):
+        if not d:
+            return
+        self.queue = EventQueue.from_state_dict(d["queue"])
+        self.launches = np.asarray(d["launches"], np.int64)
+        self.round_steps = np.asarray(d["round_steps"], np.int64)
+        self.last_agg_clock = float(d["last_agg_clock"])
+        self.pending_relaunch = [int(i)
+                                 for i in d.get("pending_relaunch", [])]
+
+
 def make_scheduler(name: str, *, deadline_frac: float = 1.5,
-                   max_local_steps: int = 4) -> RoundScheduler:
+                   max_local_steps: int = 4, buffer_size: int = 2,
+                   staleness_power: float = 0.5) -> RoundScheduler:
     if name == "sync":
         return SyncScheduler()
     if name == "deadline":
         return DeadlineScheduler(deadline_frac=deadline_frac)
     if name == "local_steps":
         return LocalStepsScheduler(max_steps=max_local_steps)
+    if name == "async":
+        return AsyncScheduler(buffer_size=buffer_size,
+                              staleness_power=staleness_power)
     raise ValueError(
         f"unknown scheduler {name!r}; known: {SCHEDULERS}")

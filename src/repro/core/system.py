@@ -9,10 +9,20 @@ The round loop itself is split engine/policy:
   * the *engine* (rounds.make_train_step) is one jitted executable; which
     clients run and how many local steps each takes per round is data;
   * the *policy* is a RoundScheduler (repro.core.scheduler): sync
-    (Algorithm 1 lockstep), deadline (straggler drop), or local_steps
-    (speed-proportional K_i per client).  The scheduler also owns the
-    simulated wall-clock accounting (`sim_time` / cumulative `sim_clock`
-    in the round records) that the benchmarks compare.
+    (Algorithm 1 lockstep), deadline (straggler drop), local_steps
+    (speed-proportional K_i per client), or async (FedBuff-style
+    buffered asynchrony).  The scheduler also owns the simulated
+    wall-clock accounting (`sim_time` / cumulative `sim_clock` in the
+    round records) that the benchmarks compare.
+
+The host loop has two shapes.  The barrier schedulers run one plan ->
+one engine call -> one record per round (`_run_barrier`).  The async
+scheduler replaces the barrier with an event-queue loop (`_run_async`):
+per-client completion events drawn from the SpeedModel advance a
+simulated clock; each event tick is one engine call over the finishing
+clients, and a round record is emitted whenever the server buffer
+reaches `buffer_size` and flushes (one round == one aggregation, so
+histories stay comparable across schedulers).
 
 Everything device-side lives in rounds.py; this class only moves numpy
 batches in and metrics out, so it works identically on CPU (paper-scale
@@ -57,13 +67,22 @@ class SystemConfig:
     smashed_topk_frac: Optional[float] = None
     smashed_ef: Optional[bool] = None  # EF residual for smashed topk;
                                        # None -> on iff compressor is topk
-    scheduler: Optional[str] = None    # sync | deadline | local_steps;
-                                       # None -> arch.split.scheduler
-                                       # (straggler_sim promotes sync ->
-                                       # deadline, the legacy spelling)
+    scheduler: Optional[str] = None    # sync | deadline | local_steps |
+                                       # async; None -> arch.split.
+                                       # scheduler (straggler_sim promotes
+                                       # sync -> deadline, the legacy
+                                       # spelling)
     max_local_steps: Optional[int] = None    # None -> arch.split
     straggler_sim: bool = False        # attach a SpeedModel
     deadline_frac: Optional[float] = None    # None -> arch.split
+    buffer_size: Optional[int] = None  # async: aggregate every M distinct
+                                       # client completions; None ->
+                                       # arch.split (clamped to N)
+    staleness_power: Optional[float] = None  # async: (1+s)^-p discount;
+                                             # None -> arch.split
+    speed_sigma: Optional[float] = None      # SpeedModel overrides (None
+    bw_sigma: Optional[float] = None         # -> SpeedModel defaults);
+    jitter_sigma: Optional[float] = None     # 0s = deterministic fleet
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0
     keep_checkpoints: int = 3
@@ -115,9 +134,19 @@ class SplitFTSystem:
         k_cap = (arch.split.max_local_steps
                  if self.sys.max_local_steps is None
                  else self.sys.max_local_steps)
+        buf = (arch.split.async_buffer_size
+               if self.sys.buffer_size is None else self.sys.buffer_size)
+        buf = max(1, min(buf, n))      # can never exceed distinct clients
+        spow = (arch.split.staleness_power
+                if self.sys.staleness_power is None
+                else self.sys.staleness_power)
         self.scheduler = scheduler_lib.make_scheduler(
-            sched_name, deadline_frac=dl_frac, max_local_steps=k_cap)
-        self.speed = (SpeedModel(n, seed=seed)
+            sched_name, deadline_frac=dl_frac, max_local_steps=k_cap,
+            buffer_size=buf, staleness_power=spow)
+        speed_kw = {k: getattr(self.sys, k)
+                    for k in ("speed_sigma", "bw_sigma", "jitter_sigma")
+                    if getattr(self.sys, k) is not None}
+        self.speed = (SpeedModel(n, seed=seed, **speed_kw)
                       if (self.sys.straggler_sim
                           or self.scheduler.needs_speed) else None)
         self.sim_clock = 0.0           # cumulative simulated seconds
@@ -145,15 +174,19 @@ class SplitFTSystem:
                 "memoryless round-trips with no residual to feed back")
         if use_smashed_ef:
             self.state = rounds.with_smashed_ef(self.state, self.model)
-        if self.scheduler.max_steps > 1:
-            self.state = rounds.with_step_budgets(self.state)
+        is_async = self.scheduler.name == "async"
+        self.state = rounds.prepare_state(
+            self.state, max_local_steps=self.scheduler.max_steps,
+            async_buffer=is_async)
         self.train_step = rounds.make_train_step(
             self.model, policy=policy, remat=arch.train.remat,
             agg_every=self.sys.agg_every, compress=self.sys.compress,
             topk_frac=self.sys.topk_frac,
             smashed_compress=self.smashed_compress,
             smashed_topk_frac=self.smashed_topk_frac,
-            max_local_steps=self.scheduler.max_steps, jit=jit)
+            max_local_steps=self.scheduler.max_steps,
+            async_buffer=is_async, buffer_size=buf,
+            staleness_power=spow, jit=jit)
         self.eval_step = rounds.make_eval_step(self.model, policy=policy,
                                                jit=jit)
 
@@ -161,6 +194,8 @@ class SplitFTSystem:
         self.c3_weights = np.ones(n)
         self.sample_counts = np.array([l.num_samples()
                                        for l in self.loaders], float)
+        self._comm_cache = None        # (cuts bytes, comm dict) memo
+        self._times_cache: Dict[Any, np.ndarray] = {}
         self.ckpt = (CheckpointManager(self.sys.checkpoint_dir,
                                        keep=self.sys.keep_checkpoints)
                      if self.sys.checkpoint_dir else None)
@@ -229,9 +264,14 @@ class SplitFTSystem:
 
     def _round_record(self, r: int, metrics, plan: RoundPlan,
                       cb: Dict[str, np.ndarray]) -> Dict[str, Any]:
+        # async ticks train a subset, so the training loss ("total") is
+        # not comparable to a barrier round's fleet average; the engine's
+        # "fleet_total" (whole-fleet weighted loss at the flush tick) is
+        loss_key = "fleet_total" if plan.buffer_fill is not None \
+            else "total"
         rec: Dict[str, Any] = {
             "round": r,
-            "loss": float(metrics["total"]),
+            "loss": float(metrics[loss_key]),
             "ce": np.asarray(metrics["ce"]),
             "accuracy": np.asarray(metrics["accuracy"]),
             "cuts": np.asarray(self.state["cuts"]).copy(),
@@ -247,8 +287,18 @@ class SplitFTSystem:
         # at one step this reduces exactly to cb["total"].
         steps = plan.step_budgets.astype(np.float64)
         smashed = (cb["smashed_up"] + cb["smashed_down"]) * steps
-        rec["comm"] = (smashed + cb["adapter_up"] * plan.active
-                       + cb["adapter_down"])
+        if plan.buffer_fill is not None:
+            # async: only the buffered clients upload b1 and receive the
+            # b3 re-broadcast at this aggregation; in-flight clients
+            # exchange nothing at the boundary
+            rec["comm"] = (smashed + (cb["adapter_up"]
+                                      + cb["adapter_down"]) * plan.active)
+            rec["staleness"] = np.asarray(plan.staleness).copy()
+            rec["buffer_fill"] = plan.buffer_fill
+            rec["round_steps"] = plan.step_budgets.copy()
+        else:
+            rec["comm"] = (smashed + cb["adapter_up"] * plan.active
+                           + cb["adapter_down"])
         rec["comm_smashed"] = smashed
         rec["smashed_ratio"] = cb["smashed_ratio"]
         if self.scheduler.max_steps > 1:
@@ -271,9 +321,37 @@ class SplitFTSystem:
         self.state["cuts"] = jnp.asarray(new_cuts, jnp.int32)
         rec["weights"] = self.c3_weights.copy()
 
+    def _finish_round(self, r: int, rec: Dict[str, Any], log_every: int,
+                      callback: Optional[Callable]):
+        """Round epilogue shared by the barrier and async host loops:
+        C3 adjustment, history, callback, checkpoint cadence, logging."""
+        if self._adaptive and (r + 1) % self.sys.adjust_every == 0:
+            weights = jnp.asarray(self.combined_weights(), jnp.float32)
+            self._adjust_c3(r, rec, weights, rec.get("round_time_sim"))
+        self.history.append(rec)
+        if callback:
+            callback(rec)
+        if self.ckpt and self.sys.checkpoint_every and \
+                (r + 1) % self.sys.checkpoint_every == 0:
+            self.save(r + 1)
+        if log_every and (r + 1) % log_every == 0:
+            print(f"[round {r + 1}] loss={rec['loss']:.4f} "
+                  f"acc={rec['accuracy'].mean():.4f} "
+                  f"cuts={rec['cuts'].tolist()}")
+
     # ------------------------------------------------------------------
     def run(self, num_rounds: int, *, log_every: int = 10,
             callback: Optional[Callable] = None) -> List[Dict[str, Any]]:
+        if self.scheduler.name == "async":
+            return self._run_async(num_rounds, log_every=log_every,
+                                   callback=callback)
+        return self._run_barrier(num_rounds, log_every=log_every,
+                                 callback=callback)
+
+    def _run_barrier(self, num_rounds: int, *, log_every: int = 10,
+                     callback: Optional[Callable] = None
+                     ) -> List[Dict[str, Any]]:
+        """One plan -> one engine call -> one record per round."""
         arch = self.arch
         lr_c = jnp.float32(arch.train.lr_client)
         lr_s = jnp.float32(arch.train.lr_server)
@@ -295,19 +373,147 @@ class SplitFTSystem:
             self.sim_clock += plan.sim_time
 
             rec = self._round_record(r, metrics, plan, cb)
-            if self._adaptive and (r + 1) % self.sys.adjust_every == 0:
-                self._adjust_c3(r, rec, weights, plan.times)
+            self._finish_round(r, rec, log_every, callback)
+        return self.history
 
-            self.history.append(rec)
-            if callback:
-                callback(rec)
-            if self.ckpt and self.sys.checkpoint_every and \
-                    (r + 1) % self.sys.checkpoint_every == 0:
-                self.save(r + 1)
-            if log_every and (r + 1) % log_every == 0:
-                print(f"[round {r + 1}] loss={rec['loss']:.4f} "
-                      f"acc={rec['accuracy'].mean():.4f} "
-                      f"cuts={rec['cuts'].tolist()}")
+    # ------------------------------------------------------------------
+    # async (FedBuff) host loop: event-queue simulation, no barrier
+
+    def _cached_comm(self, cuts_np: np.ndarray) -> Dict[str, np.ndarray]:
+        """_round_comm memo for the event loop: cuts change only in the
+        per-aggregation C3 epilogue, but ticks fire many times per
+        round."""
+        key = cuts_np.tobytes()
+        if self._comm_cache is None or self._comm_cache[0] != key:
+            self._comm_cache = (key, self._round_comm(cuts_np))
+        return self._comm_cache[1]
+
+    def _cached_times(self, round_idx: int, cuts_np: np.ndarray,
+                      cb: Dict[str, np.ndarray]) -> np.ndarray:
+        """_round_times memo keyed by (launch index, cuts): relaunching
+        clients at the same launch share one full-fleet draw instead of
+        re-drawing the whole lognormal vector per client."""
+        key = (round_idx, cuts_np.tobytes())
+        t = self._times_cache.get(key)
+        if t is None:
+            if len(self._times_cache) > 64:   # launches only grow; old
+                self._times_cache.clear()     # entries never recur
+            t = self._round_times(round_idx, cuts_np, cb)
+            self._times_cache[key] = t
+        return t
+
+    def _async_ensure_started(self):
+        """Launch every client's first local round onto the event queue
+        (no-op when the simulation is already in flight, e.g. after a
+        checkpoint restore repopulated it)."""
+        sched = self.scheduler
+        if sched.started:
+            return
+        n = self.pool.active.shape[0]
+        sched.start(n, clock=self.sim_clock)
+        cuts_np = np.asarray(self.state["cuts"])
+        cb = self._cached_comm(cuts_np)
+        for i in range(n):
+            t_i = self._cached_times(int(sched.launches[i]),
+                                     cuts_np, cb)[i]
+            sched.queue.push(i, self.sim_clock + float(t_i))
+
+    def _async_tick(self, r: int, lr_c, lr_s) -> Optional[Dict[str, Any]]:
+        """Advance the simulation by one completion event: pop the
+        earliest-finishing clients, run their local step through the
+        engine, push their updates into the buffer, and relaunch them at
+        their next simulated completion time.  Returns the round record
+        when this tick flushed the buffer (closing round r), else None."""
+        sched = self.scheduler
+        cuts_np = np.asarray(self.state["cuts"])
+        cb = self._cached_comm(cuts_np)
+        t_now, who = sched.queue.pop_next()
+        self.sim_clock = sched.queue.now
+
+        act = np.zeros(len(self.loaders), np.float64)
+        act[who] = 1.0
+        act *= self.pool.active.astype(np.float64)
+        # client i's tick consumes its own launch-indexed batch stream
+        # (launch L <-> the batch a barrier scheduler would use at round
+        # L), so constant speeds reproduce the sync data order exactly
+        batch = stack_client_batches(
+            [l.batch(int(sched.launches[i]))
+             for i, l in enumerate(self.loaders)])
+        weights = jnp.asarray(self.combined_weights(), jnp.float32)
+        self.state, metrics = self.train_step(
+            self.base_params, self.state, batch, weights,
+            jnp.asarray(act, jnp.float32), lr_c, lr_s)
+
+        sched.round_steps[act > 0] += 1
+        aggregated = bool(np.asarray(metrics["aggregated"]))
+        if aggregated:
+            # this tick's finishers just received the new global model;
+            # they relaunch after the round epilogue (C3 may move cuts,
+            # changing their next completion time) — _async_relaunch
+            sched.pending_relaunch = list(who)
+        else:
+            for i in who:
+                sched.launches[i] += 1
+                t_i = self._cached_times(int(sched.launches[i]),
+                                         cuts_np, cb)[i]
+                sched.queue.push(i, t_now + float(t_i))
+
+        if not aggregated:
+            return None
+        plan = RoundPlan(
+            active=np.asarray(metrics["buffer_mask"], np.float64).copy(),
+            step_budgets=sched.round_steps.copy(),
+            sim_time=t_now - sched.last_agg_clock,
+            times=self._cached_times(r, cuts_np, cb),
+            staleness=np.asarray(metrics["staleness"], np.float64),
+            buffer_fill=float(np.asarray(metrics["buffer_fill"])))
+        rec = self._round_record(r, metrics, plan, cb)
+        sched.round_steps[:] = 0
+        sched.last_agg_clock = t_now
+        return rec
+
+    def _async_relaunch(self):
+        """Relaunch the aggregation tick's finishers with post-epilogue
+        cuts (their compute time tracks the layer count they now hold)."""
+        sched = self.scheduler
+        if not sched.pending_relaunch:
+            return
+        cuts_np = np.asarray(self.state["cuts"])
+        cb = self._cached_comm(cuts_np)
+        t_now = sched.queue.now
+        for i in sched.pending_relaunch:
+            sched.launches[i] += 1
+            t_i = self._cached_times(int(sched.launches[i]),
+                                     cuts_np, cb)[i]
+            sched.queue.push(i, t_now + float(t_i))
+        sched.pending_relaunch = []
+
+    def _run_async(self, num_rounds: int, *, log_every: int = 10,
+                   callback: Optional[Callable] = None
+                   ) -> List[Dict[str, Any]]:
+        """Event-queue host loop: tick until the buffer flushes, emit one
+        record per aggregation (one round == one aggregation)."""
+        arch = self.arch
+        lr_c = jnp.float32(arch.train.lr_client)
+        lr_s = jnp.float32(arch.train.lr_server)
+        self._async_ensure_started()
+        self._async_relaunch()         # resume from a mid-epilogue save
+        start = int(self.state["round"])
+        for r in range(start, start + num_rounds):
+            # a shrunken fleet (elastic leave) can strand the buffer below
+            # its flush threshold: fail loudly instead of ticking forever
+            n_active = int(self.pool.active.sum())
+            if n_active < self.scheduler.buffer_size:
+                raise RuntimeError(
+                    f"async buffer_size={self.scheduler.buffer_size} can "
+                    f"never fill: only {n_active} clients are active in "
+                    "the pool; rejoin clients or rebuild the system with "
+                    "a smaller buffer_size")
+            rec = None
+            while rec is None:
+                rec = self._async_tick(r, lr_c, lr_s)
+            self._finish_round(r, rec, log_every, callback)
+            self._async_relaunch()
         return self.history
 
     # ------------------------------------------------------------------
@@ -339,6 +545,11 @@ class SplitFTSystem:
             # mismatch instead of silently restarting from round 0
             "state_keys": sorted(self.state.keys()),
         }
+        if self.scheduler.name == "async":
+            # host-side simulation state (event queue, launch counters);
+            # the buffer/version arrays are in self.state already.  Saving
+            # mid-buffer is legal: restore resumes the tick stream exactly
+            meta["async_sim"] = self.scheduler.state_dict()
         self.ckpt.save(step, self.state, metadata=meta)
 
     def restore(self) -> bool:
@@ -377,6 +588,8 @@ class SplitFTSystem:
         if "active" in meta:
             self.pool.active = np.asarray(meta["active"], bool)
         self.sim_clock = float(meta.get("sim_clock", 0.0))
+        if self.scheduler.name == "async":
+            self.scheduler.load_state_dict(meta.get("async_sim") or {})
         return True
 
     # ------------------------------------------------------------------

@@ -118,14 +118,16 @@ def build_train_cell(arch: ArchConfig, shape: ShapeConfig, mesh,
     k_steps = 1
     if scheduler == "local_steps":
         k_steps = max_local_steps or arch.split.max_local_steps
-    if k_steps > 1:
+    is_async = scheduler == "async"
+    if k_steps > 1 or is_async:
         if microbatch > 1:
             raise ValueError(
-                "scheduler='local_steps' does not compose with "
+                f"scheduler={scheduler!r} does not compose with "
                 "microbatch accumulation (rounds.make_train_step); "
                 "drop the explicit microbatch or use scheduler='sync'")
-        # the local-steps engine carries its own inner scan; skip the
-        # activation-budget auto-pick instead of silently accumulating
+        # the local-steps engine carries its own inner scan (and the
+        # async engine is a single event tick); skip the activation-
+        # budget auto-pick instead of silently accumulating
         microbatch = 1
     elif microbatch <= 0:
         microbatch = _auto_microbatch(arch, shape, mesh, num_clients,
@@ -140,8 +142,9 @@ def build_train_cell(arch: ArchConfig, shape: ShapeConfig, mesh,
         functools.partial(model.init_params, dtype=PARAM_DTYPE), key)
 
     def make_state(k):
-        s = rounds.init_state(model, k, num_clients=n)
-        return rounds.with_step_budgets(s) if k_steps > 1 else s
+        return rounds.prepare_state(
+            rounds.init_state(model, k, num_clients=n),
+            max_local_steps=k_steps, async_buffer=is_async)
 
     state_abs = jax.eval_shape(make_state, key)
     batch_abs = model.input_specs(shape, num_clients=n, dtype=PARAM_DTYPE)
@@ -162,7 +165,10 @@ def build_train_cell(arch: ArchConfig, shape: ShapeConfig, mesh,
         microbatch=microbatch,
         smashed_compress=arch.split.smashed_compress,
         smashed_topk_frac=arch.split.smashed_topk_frac,
-        max_local_steps=k_steps, jit=False)
+        max_local_steps=k_steps,
+        async_buffer=is_async,
+        buffer_size=max(1, min(arch.split.async_buffer_size, n)),
+        staleness_power=arch.split.staleness_power, jit=False)
 
     base_specs = shard_rules.param_specs(base_abs, mesh)
     state_specs = _state_specs(state_abs, mesh)

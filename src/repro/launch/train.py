@@ -44,7 +44,8 @@ def main(argv=None):
                          "default: the arch config's choice")
     ap.add_argument("--smashed-topk-frac", type=float, default=None)
     ap.add_argument("--scheduler", default=None,
-                    choices=[None, "sync", "deadline", "local_steps"],
+                    choices=[None, "sync", "deadline", "local_steps",
+                             "async"],
                     help="round scheduler (repro.core.scheduler); "
                          "default: the arch config's choice "
                          "(--straggler-sim alone implies deadline)")
@@ -52,6 +53,13 @@ def main(argv=None):
                     help="static K cap for --scheduler local_steps")
     ap.add_argument("--deadline-frac", type=float, default=None,
                     help="drop threshold (x median) for deadline")
+    ap.add_argument("--buffer-size", type=int, default=None,
+                    help="--scheduler async: aggregate every M distinct "
+                         "client completions (clamped to the client "
+                         "count)")
+    ap.add_argument("--staleness-power", type=float, default=None,
+                    help="--scheduler async: (1+staleness)^-p weight "
+                         "discount (0 disables)")
     ap.add_argument("--straggler-sim", action="store_true")
     ap.add_argument("--samples", type=int, default=2000)
     ap.add_argument("--out", default="runs/train")
@@ -94,6 +102,8 @@ def main(argv=None):
         scheduler=args.scheduler,
         max_local_steps=args.max_local_steps,
         deadline_frac=args.deadline_frac,
+        buffer_size=args.buffer_size,
+        staleness_power=args.staleness_power,
         straggler_sim=args.straggler_sim,
         checkpoint_dir=os.path.join(args.out, "ckpt"),
         checkpoint_every=max(args.rounds // 5, 1))

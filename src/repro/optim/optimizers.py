@@ -5,6 +5,16 @@ round engine can shard/checkpoint optimizer state like any other pytree.
 
 `update(grads, state, params, lr)` returns (new_params, new_state); `lr`
 is a traced scalar so schedules never trigger recompilation.
+
+The step counter `state["count"]` may be a scalar (every parameter has
+taken the same number of steps — the usual case) or a 1-D per-client
+vector.  The vector form exists for the federated local-steps/async round
+engines (repro.core.rounds), where client i may take fewer optimizer
+steps than client j inside one round: Adam's bias correction must then
+use each client's OWN step count, not a shared one, or small-budget
+clients get over-corrected moments.  Client-stacked leaves put the client
+axis at position 1 ((Lg, N, ...) — the repo-wide layout), so a vector
+count of shape (N,) broadcasts there; 1-D leaves are already per-client.
 """
 
 from __future__ import annotations
@@ -68,7 +78,9 @@ def adamw(beta1: float = 0.9, beta2: float = 0.999, eps: float = 1e-8,
         bc2 = 1 - beta2 ** cnt.astype(jnp.float32)
 
         def step(p, m_, v_):
-            upd = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            b1 = _bc_broadcast(bc1, m_)
+            b2 = _bc_broadcast(bc2, m_)
+            upd = (m_ / b1) / (jnp.sqrt(v_ / b2) + eps)
             return (p - lr * (upd + weight_decay * p.astype(jnp.float32))
                     .astype(p.dtype)).astype(p.dtype)
 
@@ -76,6 +88,17 @@ def adamw(beta1: float = 0.9, beta2: float = 0.999, eps: float = 1e-8,
         return new_params, {"m": m, "v": v, "count": cnt}
 
     return Optimizer(init, update)
+
+
+def _bc_broadcast(bc, leaf):
+    """Align a bias-correction factor with a parameter leaf.
+
+    Scalar counts broadcast trivially.  A vector count has one entry per
+    client: client-stacked leaves carry the client axis at position 1
+    ((Lg, N, ...)), 1-D leaves are already indexed by client."""
+    if bc.ndim == 0 or leaf.ndim <= 1:
+        return bc
+    return bc.reshape((1, -1) + (1,) * (leaf.ndim - 2))
 
 
 def _clip(grads, clip: float):

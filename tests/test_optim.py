@@ -32,6 +32,39 @@ def test_adamw_bias_correction_first_step():
                                [-0.1, 0.1, -0.1], rtol=1e-3, atol=1e-4)
 
 
+def test_adamw_vector_count_matches_independent_runs():
+    """Per-client Adam parity: a (N,) step-count vector must update each
+    client's slice exactly as an independent run whose scalar count is
+    that client's own step count (the bias-correction contract behind
+    rounds.with_per_client_opt_steps)."""
+    opt = adamw()
+    lg, n, d = 2, 3, 4
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (lg, n, d))}
+    counts = [0, 2, 5]
+    lr = jnp.float32(0.1)
+
+    # vectorized: counts differ per client, moments warm-started unevenly
+    k1, k2 = jax.random.split(key)
+    m0 = jax.random.normal(k1, (lg, n, d)) * 0.1
+    v0 = jax.random.uniform(k2, (lg, n, d)) * 0.01
+    state = {"m": {"w": m0}, "v": {"w": v0},
+             "count": jnp.asarray(counts, jnp.int32)}
+    g = {"w": jax.random.normal(jax.random.PRNGKey(7), (lg, n, d))}
+    new_vec, st_vec = opt.update(g, state, params, lr)
+
+    for i, c in enumerate(counts):
+        # independent run for client i alone, scalar count c
+        state_i = {"m": {"w": m0[:, i]}, "v": {"w": v0[:, i]},
+                   "count": jnp.asarray(c, jnp.int32)}
+        new_i, _ = opt.update({"w": g["w"][:, i]}, state_i,
+                              {"w": params["w"][:, i]}, lr)
+        np.testing.assert_array_equal(np.asarray(new_vec["w"][:, i]),
+                                      np.asarray(new_i["w"]))
+    np.testing.assert_array_equal(np.asarray(st_vec["count"]),
+                                  np.asarray(counts) + 1)
+
+
 def test_grad_clip_bounds_norm():
     opt = make_optimizer("sgd", grad_clip=1.0)
     params = {"w": jnp.zeros(4)}

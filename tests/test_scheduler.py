@@ -315,6 +315,186 @@ def test_checkpoint_roundtrips_scheduler_state():
         s2.run(2, log_every=0)            # continues fine
 
 
+def test_per_client_adam_count_fixes_bias_correction():
+    """ROADMAP bug: the inner scan shared one Adam step count across
+    clients, so a budget-1 client's round-2 bias correction used the
+    budget-K client's count.  With per-client counts
+    (with_per_client_opt_steps) the budget-1 client must evolve exactly
+    as in a run where EVERY budget is 1; with the legacy shared count it
+    must not (the regression this test pins).  lr_s=0 freezes the shared
+    server side and grad_clip=0 removes the cross-client clip coupling,
+    so the budget-1 client's inputs are identical across runs."""
+    arch = reduced(get_config("gpt2-small"), layers=4, d_model=32,
+                   vocab=128, seq_len=16, batch=2)
+    arch = arch.replace(train=dataclasses.replace(arch.train,
+                                                  grad_clip=0.0))
+    model = build_model(arch)
+    n, K = 2, 3
+    key = jax.random.PRNGKey(1)
+    params = model.init_params(key)
+    v = arch.model.vocab_size
+    batch = {"tokens": jax.random.randint(key, (n, 2, 16), 3, v),
+             "labels": jax.random.randint(key, (n, 2, 16), 3, v),
+             "loss_mask": jnp.ones((n, 2, 16), jnp.float32)}
+    batch_k = jax.tree.map(lambda t: jnp.stack([t] * K), batch)
+    w = jnp.ones(n) / n
+    act = jnp.ones(n)
+    lr_c, lr_s = jnp.float32(1e-2), jnp.float32(0.0)
+
+    def run(budgets, per_client):
+        state = rounds.with_step_budgets(
+            rounds.init_state(model, key, num_clients=n))
+        if per_client:
+            state = rounds.with_per_client_opt_steps(state)
+        state["step_budgets"] = jnp.asarray(budgets, jnp.int32)
+        step = rounds.make_train_step(model, max_local_steps=K,
+                                      agg_every=100, jit=True)
+        for _ in range(2):
+            state, _ = step(params, state, batch_k, w, act, lr_c, lr_s)
+        return state
+
+    def client0(state):
+        return np.asarray(state["client_adapters"]["dec"]["q"]["A"])[:, 0]
+
+    s_het = run([1, K], per_client=True)
+    s_ones = run([1, 1], per_client=True)
+    # fixed: the budget-1 client is exactly a K_i=1 independent run
+    np.testing.assert_array_equal(client0(s_het), client0(s_ones))
+    np.testing.assert_array_equal(
+        np.asarray(s_het["opt_c"]["count"]), [2, 2 * K])
+    # legacy shared count: client 0's round-2 step used count 4, not 2
+    s_legacy = run([1, K], per_client=False)
+    assert int(np.asarray(s_legacy["opt_c"]["count"])) == 2 * K
+    assert np.abs(client0(s_legacy) - client0(s_ones)).max() > 0
+
+
+# ---------------------------------------------------------------------------
+# async (FedBuff) scheduler: system behavior, checkpointing, validation
+
+
+def test_async_buffer_size_clamps_to_fleet():
+    cfg = SystemConfig(scheduler="async", buffer_size=99, **SYS)
+    sys_ = SplitFTSystem(small_arch(), cfg, seed=0)
+    assert sys_.scheduler.buffer_size == 3          # num_clients
+    assert "buffer_mask" in sys_.state
+    assert "adapter_version" in sys_.state
+
+
+def test_async_system_trains_and_records():
+    cfg = SystemConfig(scheduler="async", buffer_size=2, **SYS)
+    sys_ = SplitFTSystem(small_arch(), cfg, seed=0)
+    hist = sys_.run(5, log_every=0)
+    assert len(hist) == 5
+    for h in hist:
+        assert h["buffer_fill"] >= 2
+        assert (h["staleness"] >= 0).all()
+        assert h["round_steps"].sum() >= h["buffer_fill"]
+        # buffered clients pay smashed + adapter bytes; in-flight pay none
+        # at the boundary beyond their completed smashed exchanges
+        assert np.sum(h["comm"]) > 0
+    assert int(sys_.state["global_version"]) == 5
+    assert np.isfinite(hist[-1]["loss"])
+
+
+def test_async_checkpoint_roundtrip_mid_buffer():
+    """Save with a PARTIALLY FULL buffer (between aggregations), restore
+    into a fresh system, and the next aggregation must be bitwise
+    identical to the uninterrupted run — buffer contents, per-client
+    adapter versions and the event-queue clock all round-trip."""
+    arch = small_arch()
+    lr = jnp.float32(arch.train.lr_client)
+
+    def ticks_until_agg(sys_):
+        rec = None
+        while rec is None:
+            rec = sys_._async_tick(2, lr, lr)
+        return rec
+
+    with tempfile.TemporaryDirectory() as d:
+        cfg = SystemConfig(scheduler="async", buffer_size=3,
+                           checkpoint_dir=d, adaptive=False, **SYS)
+        s1 = SplitFTSystem(arch, cfg, seed=3)
+        s1.run(2, log_every=0)
+        # tick manually until the buffer holds someone but has not flushed
+        while float(np.asarray(s1.state["buffer_mask"]).sum()) == 0:
+            assert s1._async_tick(2, lr, lr) is None
+        assert 0 < float(np.asarray(s1.state["buffer_mask"]).sum()) < 3
+        s1.save(42)
+
+        s2 = SplitFTSystem(arch, cfg, seed=3)
+        assert s2.restore()
+        np.testing.assert_array_equal(
+            np.asarray(s1.state["buffer_mask"]),
+            np.asarray(s2.state["buffer_mask"]))
+        np.testing.assert_array_equal(
+            np.asarray(s1.state["adapter_version"]),
+            np.asarray(s2.state["adapter_version"]))
+        assert s2.scheduler.queue.now == s1.scheduler.queue.now
+        assert s2.scheduler.queue.state_dict() == \
+            s1.scheduler.queue.state_dict()
+
+        rec1 = ticks_until_agg(s1)
+        rec2 = ticks_until_agg(s2)
+        assert rec1["loss"] == rec2["loss"]
+        assert rec1["sim_clock"] == rec2["sim_clock"]
+        np.testing.assert_array_equal(rec1["staleness"], rec2["staleness"])
+        for a, b in zip(jax.tree.leaves(s1.state["client_adapters"]),
+                        jax.tree.leaves(s2.state["client_adapters"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_async_against_sync_checkpoint_raises():
+    """Resuming async from a sync checkpoint must fail loudly: the state
+    templates differ (buffer/version leaves) and the saved scheduler name
+    is the diagnosis restore() reports."""
+    arch = small_arch()
+    with tempfile.TemporaryDirectory() as d:
+        cfg = SystemConfig(checkpoint_dir=d, checkpoint_every=2, **SYS)
+        s1 = SplitFTSystem(arch, cfg, seed=0)
+        s1.run(2, log_every=0)
+        cfg2 = dataclasses.replace(cfg, scheduler="async")
+        s2 = SplitFTSystem(arch, cfg2, seed=0)
+        with pytest.raises(ValueError, match="scheduler"):
+            s2.restore()
+
+
+def test_async_engine_validation():
+    model = tiny_model()
+    with pytest.raises(ValueError, match="compress"):
+        rounds.make_train_step(model, async_buffer=True, compress="topk")
+    with pytest.raises(ValueError, match="compose"):
+        rounds.make_train_step(model, async_buffer=True, max_local_steps=2)
+    with pytest.raises(ValueError, match="agg_every"):
+        rounds.make_train_step(model, async_buffer=True, agg_every=2)
+    with pytest.raises(ValueError, match="buffer_size"):
+        rounds.make_train_step(model, async_buffer=True, buffer_size=0)
+    with pytest.raises(ValueError, match="buffer_size"):
+        scheduler_lib.make_scheduler("async", buffer_size=0)
+    with pytest.raises(NotImplementedError):
+        scheduler_lib.make_scheduler("async").plan(active=np.ones(3))
+    # an unfillable buffer fails at trace time, not by hanging
+    key = jax.random.PRNGKey(0)
+    state = rounds.with_per_client_opt_steps(rounds.with_async_buffer(
+        rounds.init_state(model, key, num_clients=2)))
+    step = rounds.make_train_step(model, async_buffer=True, buffer_size=5,
+                                  jit=True)
+    v = model.arch.model.vocab_size
+    batch = {"tokens": jax.random.randint(key, (2, 2, 16), 3, v),
+             "labels": jax.random.randint(key, (2, 2, 16), 3, v),
+             "loss_mask": jnp.ones((2, 2, 16), jnp.float32)}
+    with pytest.raises(ValueError, match="never fill"):
+        step(model.init_params(key), state, batch, jnp.ones(2) / 2,
+             jnp.ones(2), jnp.float32(1e-2), jnp.float32(1e-2))
+
+
+def test_async_shrunken_pool_raises_instead_of_hanging():
+    cfg = SystemConfig(scheduler="async", buffer_size=3, **SYS)
+    sys_ = SplitFTSystem(small_arch(), cfg, seed=0)
+    sys_.pool.leave(0)
+    with pytest.raises(RuntimeError, match="never fill"):
+        sys_.run(1, log_every=0)
+
+
 def test_smashed_ef_frozen_for_inactive_clients():
     """A deadline-dropped client transmitted nothing this round: its
     accumulated EF residual must survive the round unchanged (both

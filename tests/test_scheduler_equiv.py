@@ -1,0 +1,192 @@
+"""Scheduler-equivalence harness (ISSUE 4).
+
+Pins the scheduler family's cross-policy invariants so the barrier
+policies cannot regress while async/buffered aggregation lands:
+
+  * async with buffer_size == num_clients under a CONSTANT-speed fleet
+    reduces to sync — round-digest (losses, simulated clock, adapter
+    trees) parity, bitwise;
+  * the refactored host loop calls the engine exactly like a direct
+    engine loop would (sync digest unchanged by the host refactor);
+  * staleness weights are positive, <= 1, and monotone non-increasing in
+    staleness (property-based via hypothesis_compat);
+  * the event-queue simulated clock is non-decreasing, batches ties into
+    one tick, and matches the barrier clock for sync;
+  * the async buffer never flushes below buffer_size distinct clients.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.config import reduced
+from repro.configs import get_config
+from repro.core import aggregation, rounds, scheduler as scheduler_lib
+from repro.core.system import SplitFTSystem, SystemConfig
+
+
+def small_arch(layers=4, lr=3e-3):
+    arch = reduced(get_config("gpt2-small"), layers=layers, d_model=64,
+                   vocab=512, seq_len=64, batch=4)
+    return arch.replace(train=dataclasses.replace(
+        arch.train, lr_client=lr, lr_server=lr))
+
+
+SYS = dict(num_samples=150, eval_samples=32)
+# a deterministic fleet: every client identical speed/bandwidth/jitter
+CONST_SPEED = dict(speed_sigma=0.0, bw_sigma=0.0, jitter_sigma=0.0)
+
+
+def adapter_digest(state):
+    """Bitwise round digest: every adapter leaf as a raw-byte tuple."""
+    return tuple(np.asarray(leaf).tobytes()
+                 for key in ("client_adapters", "server_adapters")
+                 for leaf in jax.tree.leaves(state[key]))
+
+
+# ---------------------------------------------------------------------------
+# async(buffer=N, constant speeds) == sync, round digest, bitwise
+
+
+def test_async_buffer_n_constant_speed_reduces_to_sync():
+    """With every client equally fast and the buffer as wide as the
+    fleet, every tick is the whole fleet finishing at once and every
+    flush is a plain FedAvg with staleness 0 — i.e. sync, bit for bit.
+    adaptive=False keeps the cuts homogeneous: once C3 moves cuts apart,
+    per-client completion times legitimately diverge and async stops
+    being lockstep (which is its job, not a regression)."""
+    n_rounds = 4
+    s_sync = SplitFTSystem(
+        small_arch(), SystemConfig(scheduler="sync", straggler_sim=True,
+                                   adaptive=False, **CONST_SPEED, **SYS),
+        seed=0)
+    h_sync = s_sync.run(n_rounds, log_every=0)
+    s_async = SplitFTSystem(
+        small_arch(), SystemConfig(scheduler="async", buffer_size=3,
+                                   adaptive=False, **CONST_SPEED, **SYS),
+        seed=0)
+    h_async = s_async.run(n_rounds, log_every=0)
+
+    for a, b in zip(h_sync, h_async):
+        assert a["loss"] == b["loss"]                       # bitwise
+        assert a["sim_clock"] == b["sim_clock"]             # event==barrier
+        # sim_time is a difference of absolute event times on the async
+        # side ((r+1)*t - r*t), so it can sit 1 ulp off the barrier's t
+        assert a["sim_time"] == pytest.approx(b["sim_time"], rel=1e-9)
+        np.testing.assert_array_equal(a["active"], b["active"])
+        np.testing.assert_array_equal(a["comm"], b["comm"])
+    assert adapter_digest(s_sync.state) == adapter_digest(s_async.state)
+    # no update was ever stale, every flush saw the whole fleet
+    for h in h_async:
+        assert h["buffer_fill"] == 3.0
+        np.testing.assert_array_equal(h["staleness"], 0.0)
+    assert int(s_async.state["global_version"]) == n_rounds
+
+
+def test_host_loop_refactor_keeps_sync_engine_digest():
+    """The run() host loop (post event-queue refactor) must drive the
+    sync engine exactly like a direct engine loop: same batches, same
+    weights, one step per round — digest equality pins the refactor."""
+    arch = small_arch()
+    sys_ = SplitFTSystem(arch, SystemConfig(adaptive=False, **SYS), seed=0)
+    state = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)), sys_.state)
+    weights = jnp.asarray(sys_.combined_weights(), jnp.float32)
+    active = jnp.ones(3, jnp.float32)
+    lr = jnp.float32(arch.train.lr_client)
+    step = rounds.make_train_step(sys_.model, jit=True)
+    for r in range(3):
+        state, _ = step(sys_.base_params, state, sys_._train_batch(r),
+                        weights, active, lr, lr)
+
+    sys_.run(3, log_every=0)
+    assert adapter_digest(sys_.state) == adapter_digest(state)
+
+
+# ---------------------------------------------------------------------------
+# staleness-discount properties
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(min_value=0.0, max_value=1e6,
+                           allow_nan=False), min_size=1, max_size=16),
+       st.floats(min_value=0.0, max_value=4.0, allow_nan=False))
+def test_staleness_discount_properties(staleness, power):
+    s = np.sort(np.asarray(staleness, np.float64))
+    d = np.asarray(aggregation.staleness_discount(s, power=power))
+    assert (d > 0).all()                    # never erases an update
+    assert (d <= 1.0 + 1e-6).all()          # never amplifies one
+    assert (np.diff(d) <= 1e-6).all()       # monotone non-increasing
+    # fresh updates count fully
+    assert float(aggregation.staleness_discount(0.0, power=power)) == 1.0
+
+
+def test_staleness_discount_default_is_fedbuff_rule():
+    d = np.asarray(aggregation.staleness_discount(np.array([0.0, 3.0])))
+    np.testing.assert_allclose(d, [1.0, 0.5], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# event queue: ordering, tie batching, monotone clock
+
+
+def test_event_queue_orders_and_batches_ties():
+    q = scheduler_lib.EventQueue()
+    q.push(0, 2.0)
+    q.push(1, 1.0)
+    q.push(2, 1.0)
+    t, who = q.pop_next()
+    assert (t, who) == (1.0, [1, 2])        # tie -> one tick, sorted
+    assert q.now == 1.0
+    t, who = q.pop_next()
+    assert (t, who) == (2.0, [0])
+    assert len(q) == 0
+    with pytest.raises(ValueError):
+        q.pop_next()                        # nothing in flight
+    with pytest.raises(ValueError):
+        q.push(0, 1.5)                      # events cannot land in past
+
+
+def test_event_queue_state_roundtrip():
+    q = scheduler_lib.EventQueue(now=3.0)
+    q.push(1, 4.5)
+    q.push(4, 7.25)
+    q2 = scheduler_lib.EventQueue.from_state_dict(q.state_dict())
+    assert q2.now == q.now
+    assert q2.pop_next() == (4.5, [1])
+    assert q2.pop_next() == (7.25, [4])
+
+
+def test_async_clock_monotone_and_buffer_floor():
+    """Under genuinely heterogeneous speeds: the simulated clock never
+    goes backwards, every flush has >= buffer_size distinct clients, and
+    the device-side version counter advances one per round."""
+    cfg = SystemConfig(scheduler="async", buffer_size=2, adaptive=False,
+                       **SYS)
+    sys_ = SplitFTSystem(small_arch(), cfg, seed=3)
+    hist = sys_.run(6, log_every=0)
+    clocks = [h["sim_clock"] for h in hist]
+    assert all(b >= a for a, b in zip(clocks, clocks[1:]))
+    assert all(h["sim_time"] > 0 for h in hist)
+    for h in hist:
+        assert h["buffer_fill"] >= 2
+        assert (h["staleness"] >= 0).all()
+        # the aggregated clients are exactly the buffered ones
+        assert h["active"].sum() == h["buffer_fill"]
+    assert int(sys_.state["global_version"]) == 6
+    assert np.isfinite(hist[-1]["loss"])
+
+
+def test_sync_barrier_clock_is_cumulative_barrier_maxima():
+    cfg = SystemConfig(scheduler="sync", straggler_sim=True,
+                       adaptive=False, **SYS)
+    sys_ = SplitFTSystem(small_arch(), cfg, seed=1)
+    hist = sys_.run(4, log_every=0)
+    expect = 0.0
+    for h in hist:
+        assert h["sim_time"] == pytest.approx(h["round_time_sim"].max())
+        expect += h["sim_time"]
+        assert h["sim_clock"] == pytest.approx(expect)
