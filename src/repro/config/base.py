@@ -253,6 +253,13 @@ class SplitConfig:
     async_buffer_size: int = 2          # async: aggregate every M distinct
                                         # client completions (clamped to N)
     staleness_power: float = 0.5        # async: (1+staleness)^-p discount
+    # Overlapped communication (simulated clock only — training numerics
+    # are identical): pipeline the per-step phases (client compute -> f2
+    # uplink -> server compute -> f4 downlink -> adapter sync) double-
+    # buffered, one outstanding transfer per direction, so uplink of
+    # step k hides behind compute of k+1.  False = the legacy serial
+    # clock (phases charged back to back).
+    overlap_comm: bool = False
 
     def buckets(self, num_layers: int) -> Tuple[int, ...]:
         if self.cut_buckets:

@@ -17,6 +17,13 @@ The two channels compress independently:
     compressor and the smashed terms become its MEASURED wire bytes
     (payload + scale/index side data), not a flat assumed ratio.  The
     achieved per-client ratio is reported as `smashed_ratio`.
+
+The per-channel split is also what the multi-phase time model consumes
+(runtime.straggler.SpeedModel.phase_times): `smashed_up` -> the f2
+uplink phase, `smashed_down` -> the f4 downlink phase, `adapter_up` ->
+the adapter-sync phase.  Shrinking a channel here directly shrinks its
+wire phase — and under `overlap_comm` decides whether the pipeline is
+bandwidth- or compute-bound.
 """
 
 from __future__ import annotations

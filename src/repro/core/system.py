@@ -18,11 +18,21 @@ The round loop itself is split engine/policy:
 The host loop has two shapes.  The barrier schedulers run one plan ->
 one engine call -> one record per round (`_run_barrier`).  The async
 scheduler replaces the barrier with an event-queue loop (`_run_async`):
-per-client completion events drawn from the SpeedModel advance a
-simulated clock; each event tick is one engine call over the finishing
+phase-completion events drawn from the SpeedModel advance a simulated
+clock; a step-completion tick is one engine call over the finishing
 clients, and a round record is emitted whenever the server buffer
 reaches `buffer_size` and flushes (one round == one aggregation, so
 histories stay comparable across schedulers).
+
+Time is modeled per phase (client compute / f2 uplink / server compute /
+f4 downlink / adapter sync — runtime.straggler.PHASES).  With
+`overlap_comm=False` each step is one event charging the serial phase
+sum (the legacy clock); with `overlap_comm=True` the async loop runs the
+phases as a double-buffered pipeline — compute of step k+1 overlaps the
+transfers of step k — and only `adapter_sync` completions reach the
+engine.  Elastic membership composes with the event loop: a leaver's
+in-flight events are dropped (never relaunched), and a rejoiner enters
+at the current clock with its next batch index.
 
 Everything device-side lives in rounds.py; this class only moves numpy
 batches in and metrics out, so it works identically on CPU (paper-scale
@@ -50,6 +60,7 @@ from repro.data.pipeline import stack_client_batches
 from repro.data.tokenizer import HashTokenizer
 from repro.models.common import NO_SHARDING
 from repro.models.model import Model, build_model
+from repro.runtime import straggler
 from repro.runtime.elastic import ClientPool
 from repro.runtime.straggler import SpeedModel
 
@@ -80,9 +91,17 @@ class SystemConfig:
                                        # arch.split (clamped to N)
     staleness_power: Optional[float] = None  # async: (1+s)^-p discount;
                                              # None -> arch.split
+    overlap_comm: Optional[bool] = None  # pipeline the comm phases so
+                                         # uplink of step k overlaps
+                                         # compute of k+1; None ->
+                                         # arch.split.overlap_comm
     speed_sigma: Optional[float] = None      # SpeedModel overrides (None
     bw_sigma: Optional[float] = None         # -> SpeedModel defaults);
     jitter_sigma: Optional[float] = None     # 0s = deterministic fleet
+    bw_mean: Optional[float] = None          # mean link bandwidth (B/s);
+                                             # inf = zero wire time
+    server_flops_per_s: Optional[float] = None  # >0 charges the server
+                                                # compute phase too
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0
     keep_checkpoints: int = 3
@@ -140,11 +159,16 @@ class SplitFTSystem:
         spow = (arch.split.staleness_power
                 if self.sys.staleness_power is None
                 else self.sys.staleness_power)
+        self.overlap_comm = (arch.split.overlap_comm
+                             if self.sys.overlap_comm is None
+                             else self.sys.overlap_comm)
         self.scheduler = scheduler_lib.make_scheduler(
             sched_name, deadline_frac=dl_frac, max_local_steps=k_cap,
-            buffer_size=buf, staleness_power=spow)
+            buffer_size=buf, staleness_power=spow,
+            overlap_comm=self.overlap_comm)
         speed_kw = {k: getattr(self.sys, k)
-                    for k in ("speed_sigma", "bw_sigma", "jitter_sigma")
+                    for k in ("speed_sigma", "bw_sigma", "jitter_sigma",
+                              "bw_mean", "server_flops_per_s")
                     if getattr(self.sys, k) is not None}
         self.speed = (SpeedModel(n, seed=seed, **speed_kw)
                       if (self.sys.straggler_sim
@@ -240,26 +264,33 @@ class SplitFTSystem:
             smashed_compress=self.smashed_compress,
             smashed_topk_frac=self.smashed_topk_frac)
 
-    def _round_times(self, r: int, cuts_np: np.ndarray,
-                     cb: Dict[str, np.ndarray]) -> Optional[np.ndarray]:
+    def _round_phases(self, r: int, cuts_np: np.ndarray,
+                      cb: Dict[str, np.ndarray]) -> Optional[np.ndarray]:
+        """(5, N) per-phase durations of one local step (or None without
+        a speed model): comm.py's per-channel byte split maps straight
+        onto the wire phases (smashed -> f2/f4, adapter -> sync)."""
         if self.speed is None:
             return None
         arch = self.arch
         flops_layer = 12 * arch.model.d_model ** 2 \
             * arch.train.batch_size * arch.train.seq_len
-        return self.speed.round_times(
+        return self.speed.phase_times(
             cuts=cuts_np, flops_per_layer=flops_layer,
             smashed_bytes=float(cb["smashed_up"][0]),
-            adapter_bytes=cb["adapter_up"], round_idx=r)
+            smashed_down_bytes=float(cb["smashed_down"][0]),
+            adapter_bytes=cb["adapter_up"], round_idx=r,
+            server_layers=self.model.num_flat_layers - cuts_np)
 
     def _plan_round(self, r: int):
         """One scheduler decision: (RoundPlan, comm-bytes dict)."""
         cuts_np = np.asarray(self.state["cuts"])
         cb = self._round_comm(cuts_np)
-        times = self._round_times(r, cuts_np, cb)
+        phases = self._round_phases(r, cuts_np, cb)
+        times = (None if phases is None
+                 else straggler.serial_step_times(phases))
         plan = self.scheduler.plan(
             active=self.pool.active.astype(np.float64), times=times,
-            round_idx=r)
+            phases=phases, round_idx=r)
         return plan, cb
 
     def _round_record(self, r: int, metrics, plan: RoundPlan,
@@ -388,24 +419,102 @@ class SplitFTSystem:
             self._comm_cache = (key, self._round_comm(cuts_np))
         return self._comm_cache[1]
 
-    def _cached_times(self, round_idx: int, cuts_np: np.ndarray,
-                      cb: Dict[str, np.ndarray]) -> np.ndarray:
-        """_round_times memo keyed by (launch index, cuts): relaunching
+    def _cached_phases(self, round_idx: int, cuts_np: np.ndarray,
+                       cb: Dict[str, np.ndarray]) -> np.ndarray:
+        """_round_phases memo keyed by (launch index, cuts): relaunching
         clients at the same launch share one full-fleet draw instead of
         re-drawing the whole lognormal vector per client."""
         key = (round_idx, cuts_np.tobytes())
-        t = self._times_cache.get(key)
-        if t is None:
+        p = self._times_cache.get(key)
+        if p is None:
             if len(self._times_cache) > 64:   # launches only grow; old
                 self._times_cache.clear()     # entries never recur
-            t = self._round_times(round_idx, cuts_np, cb)
-            self._times_cache[key] = t
-        return t
+            p = self._round_phases(round_idx, cuts_np, cb)
+            self._times_cache[key] = p
+        return p
+
+    def _serial_time(self, i: int, launch: int, cuts_np: np.ndarray,
+                     cb: Dict[str, np.ndarray]) -> float:
+        """Client i's serial one-step time at a launch index."""
+        ph = self._cached_phases(launch, cuts_np, cb)
+        return float(straggler.serial_step_times(ph)[i])
+
+    # -- overlap pipeline (double-buffered phase events) ----------------
+
+    def _overlap_try_compute(self, i: int, cuts_np: np.ndarray,
+                             cb: Dict[str, np.ndarray]):
+        """Schedule client i's next `client_compute` phase if the
+        pipeline allows: no compute in flight, and step k-2 fully done
+        (double buffer, one outstanding transfer per direction, so the
+        client trains at staleness <= 1)."""
+        sched = self.scheduler
+        if not self.pool.active[i]:
+            return
+        if int(sched.csched[i]) != int(sched.cfin[i]):
+            return                 # a compute phase is already in flight
+        k = int(sched.csched[i])
+        if int(sched.launches[i]) < k - 1:
+            return                 # step k-2 has not fully completed
+        ph = self._cached_phases(k, cuts_np, cb)
+        sched.queue.push((i, "client_compute", k),
+                         sched.queue.now + float(ph[0, i]))
+        sched.csched[i] += 1
+
+    def _overlap_advance(self, i: int, phase: str, k: int, t_now: float,
+                         cuts_np: np.ndarray, cb: Dict[str, np.ndarray]):
+        """One non-final phase of step k finished: hand the step to the
+        next resource in the pipeline.  Every per-client stage — the
+        wire channels (f2 up, f4 down, adapter sync) AND the server
+        lane — serializes via the scheduler's busy-until times, so steps
+        complete strictly in launch order even when per-launch durations
+        vary (jitter, moved cuts): the engine may therefore index
+        batches by `launches[i]`.  Durations are drawn at hand-off, so a
+        C3-moved cut takes effect at the client's next scheduled
+        phase."""
+        sched = self.scheduler
+        q = sched.queue
+        ph = self._cached_phases(k, cuts_np, cb)
+        if phase == "client_compute":
+            sched.cfin[i] += 1
+            start = max(t_now, float(sched.eu[i]))
+            sched.eu[i] = start + float(ph[1, i])
+            q.push((i, "f2_uplink", k), sched.eu[i])
+            # the compute unit is free: step k+1 may start while step
+            # k's transfers are still in flight — the tentpole overlap
+            self._overlap_try_compute(i, cuts_np, cb)
+        elif phase == "f2_uplink":
+            start = max(t_now, float(sched.es[i]))
+            sched.es[i] = start + float(ph[2, i])
+            q.push((i, "server_compute", k), sched.es[i])
+        elif phase == "server_compute":
+            start = max(t_now, float(sched.ed[i]))
+            sched.ed[i] = start + float(ph[3, i])
+            q.push((i, "f4_downlink", k), sched.ed[i])
+        elif phase == "f4_downlink":
+            start = max(t_now, float(sched.ea[i]))
+            sched.ea[i] = start + float(ph[4, i])
+            q.push((i, "adapter_sync", k), sched.ea[i])
+        else:
+            raise ValueError(f"unknown pipeline phase {phase!r}")
+
+    def _async_launch(self, i: int, cuts_np: np.ndarray,
+                      cb: Dict[str, np.ndarray]):
+        """Put client i's next local step in flight at the current clock:
+        one whole-step event (serial) or its first pipeline phase
+        (overlap)."""
+        sched = self.scheduler
+        if sched.overlap:
+            self._overlap_try_compute(i, cuts_np, cb)
+        else:
+            launch = int(sched.launches[i])
+            t_i = self._serial_time(i, launch, cuts_np, cb)
+            sched.queue.push((i, scheduler_lib.PHASE_STEP, launch),
+                             sched.queue.now + t_i)
 
     def _async_ensure_started(self):
-        """Launch every client's first local round onto the event queue
-        (no-op when the simulation is already in flight, e.g. after a
-        checkpoint restore repopulated it)."""
+        """Launch every ACTIVE client's first local round onto the event
+        queue (no-op when the simulation is already in flight, e.g. after
+        a checkpoint restore repopulated it)."""
         sched = self.scheduler
         if sched.started:
             return
@@ -413,26 +522,72 @@ class SplitFTSystem:
         sched.start(n, clock=self.sim_clock)
         cuts_np = np.asarray(self.state["cuts"])
         cb = self._cached_comm(cuts_np)
+        # baseline for the flush record before anyone has completed
+        sched.last_times = straggler.serial_step_times(
+            self._cached_phases(0, cuts_np, cb)).copy()
         for i in range(n):
-            t_i = self._cached_times(int(sched.launches[i]),
-                                     cuts_np, cb)[i]
-            sched.queue.push(i, self.sim_clock + float(t_i))
+            if self.pool.active[i]:
+                self._async_launch(i, cuts_np, cb)
+
+    def _async_sync_membership(self):
+        """Reconcile the event simulation with elastic pool membership:
+        a leaver's in-flight events are dropped (it must never tick
+        again), and an active client with nothing in flight — a fresh
+        join or a rejoin after a mid-flight leave — enters at the CURRENT
+        clock with its next batch index."""
+        sched = self.scheduler
+        active = self.pool.active
+        cuts_np = np.asarray(self.state["cuts"])
+        cb = self._cached_comm(cuts_np)
+        for i in range(active.shape[0]):
+            if not active[i] and sched.queue.discard_client(i):
+                sched.reset_client(i)
+        # a departed client cannot honor a deferred relaunch either
+        sched.pending_relaunch = [i for i in sched.pending_relaunch
+                                  if active[i]]
+        in_flight = sched.queue.clients()
+        for i in range(active.shape[0]):
+            if active[i] and i not in in_flight \
+                    and i not in sched.pending_relaunch:
+                self._async_launch(i, cuts_np, cb)
 
     def _async_tick(self, r: int, lr_c, lr_s) -> Optional[Dict[str, Any]]:
-        """Advance the simulation by one completion event: pop the
-        earliest-finishing clients, run their local step through the
-        engine, push their updates into the buffer, and relaunch them at
-        their next simulated completion time.  Returns the round record
-        when this tick flushed the buffer (closing round r), else None."""
+        """Advance the simulation by one completion tick: pop the
+        earliest-finishing phase events, pipeline non-final phases
+        onward, run the step-completing clients through the engine
+        (pushing their updates into the buffer), and keep their pipelines
+        fed.  Returns the round record when this tick flushed the buffer
+        (closing round r); None for intermediate ticks (no step finished,
+        or the buffer is still filling)."""
         sched = self.scheduler
         cuts_np = np.asarray(self.state["cuts"])
         cb = self._cached_comm(cuts_np)
-        t_now, who = sched.queue.pop_next()
+        t_now, keys = sched.queue.pop_next()
         self.sim_clock = sched.queue.now
 
+        finishers: List[int] = []
+        for key in keys:
+            if isinstance(key, tuple):
+                i, phase, k = int(key[0]), key[1], int(key[2])
+            else:   # whole-step key from a pre-phase checkpoint
+                i, phase = int(key), scheduler_lib.PHASE_STEP
+                k = int(sched.launches[i])
+            if not self.pool.active[i]:
+                # elastic leave mid-flight: the event dies with the
+                # membership — no engine contribution, no relaunch
+                sched.queue.discard_client(i)
+                sched.reset_client(i)
+                continue
+            if phase in (scheduler_lib.PHASE_STEP,
+                         scheduler_lib.PHASE_FINAL):
+                finishers.append(i)
+            else:
+                self._overlap_advance(i, phase, k, t_now, cuts_np, cb)
+        if not finishers:
+            return None            # pipeline hand-offs only
+
         act = np.zeros(len(self.loaders), np.float64)
-        act[who] = 1.0
-        act *= self.pool.active.astype(np.float64)
+        act[finishers] = 1.0
         # client i's tick consumes its own launch-indexed batch stream
         # (launch L <-> the batch a barrier scheduler would use at round
         # L), so constant speeds reproduce the sync data order exactly
@@ -446,17 +601,21 @@ class SplitFTSystem:
 
         sched.round_steps[act > 0] += 1
         aggregated = bool(np.asarray(metrics["aggregated"]))
+        for i in finishers:
+            # the flush record reports the serial step time each client
+            # actually experienced at ITS launch index — not a fresh
+            # full-fleet draw at the aggregation-round index
+            sched.last_times[i] = self._serial_time(
+                i, int(sched.launches[i]), cuts_np, cb)
+            sched.launches[i] += 1
         if aggregated:
             # this tick's finishers just received the new global model;
-            # they relaunch after the round epilogue (C3 may move cuts,
-            # changing their next completion time) — _async_relaunch
-            sched.pending_relaunch = list(who)
+            # their next step launches after the round epilogue (C3 may
+            # move cuts, changing its duration) — _async_relaunch
+            sched.pending_relaunch = list(finishers)
         else:
-            for i in who:
-                sched.launches[i] += 1
-                t_i = self._cached_times(int(sched.launches[i]),
-                                         cuts_np, cb)[i]
-                sched.queue.push(i, t_now + float(t_i))
+            for i in finishers:
+                self._async_launch(i, cuts_np, cb)
 
         if not aggregated:
             return None
@@ -464,7 +623,7 @@ class SplitFTSystem:
             active=np.asarray(metrics["buffer_mask"], np.float64).copy(),
             step_budgets=sched.round_steps.copy(),
             sim_time=t_now - sched.last_agg_clock,
-            times=self._cached_times(r, cuts_np, cb),
+            times=sched.last_times.copy(),
             staleness=np.asarray(metrics["staleness"], np.float64),
             buffer_fill=float(np.asarray(metrics["buffer_fill"])))
         rec = self._round_record(r, metrics, plan, cb)
@@ -473,19 +632,18 @@ class SplitFTSystem:
         return rec
 
     def _async_relaunch(self):
-        """Relaunch the aggregation tick's finishers with post-epilogue
-        cuts (their compute time tracks the layer count they now hold)."""
+        """Launch the aggregation tick's finishers' next steps with
+        post-epilogue cuts (their durations track the layer count they
+        now hold).  Under overlap this is a no-op for any finisher whose
+        next compute already self-scheduled mid-pipeline."""
         sched = self.scheduler
         if not sched.pending_relaunch:
             return
         cuts_np = np.asarray(self.state["cuts"])
         cb = self._cached_comm(cuts_np)
-        t_now = sched.queue.now
         for i in sched.pending_relaunch:
-            sched.launches[i] += 1
-            t_i = self._cached_times(int(sched.launches[i]),
-                                     cuts_np, cb)[i]
-            sched.queue.push(i, t_now + float(t_i))
+            if self.pool.active[i]:    # may have left in the epilogue
+                self._async_launch(i, cuts_np, cb)
         sched.pending_relaunch = []
 
     def _run_async(self, num_rounds: int, *, log_every: int = 10,
@@ -497,6 +655,16 @@ class SplitFTSystem:
         lr_c = jnp.float32(arch.train.lr_client)
         lr_s = jnp.float32(arch.train.lr_server)
         self._async_ensure_started()
+        if self.scheduler.last_times is None:
+            # pre-phase checkpoint restore: seed real per-launch serial
+            # times so the first flush (and C3's straggler detection)
+            # never sees fake zeros
+            cuts_np = np.asarray(self.state["cuts"])
+            cb = self._cached_comm(cuts_np)
+            self.scheduler.last_times = np.array(
+                [self._serial_time(i, int(self.scheduler.launches[i]),
+                                   cuts_np, cb)
+                 for i in range(self.pool.active.shape[0])])
         self._async_relaunch()         # resume from a mid-epilogue save
         start = int(self.state["round"])
         for r in range(start, start + num_rounds):
@@ -509,6 +677,7 @@ class SplitFTSystem:
                     f"never fill: only {n_active} clients are active in "
                     "the pool; rejoin clients or rebuild the system with "
                     "a smaller buffer_size")
+            self._async_sync_membership()
             rec = None
             while rec is None:
                 rec = self._async_tick(r, lr_c, lr_s)

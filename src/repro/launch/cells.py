@@ -108,7 +108,8 @@ def build_train_cell(arch: ArchConfig, shape: ShapeConfig, mesh,
                      remat: str = "full", ce_chunk: int = 512,
                      unroll: bool = False, seq_shard: bool = None,
                      microbatch: int = 0, scheduler: str = "sync",
-                     max_local_steps: int = 0) -> Cell:
+                     max_local_steps: int = 0,
+                     overlap_comm: bool = False) -> Cell:
     if seq_shard is None:
         # §Perf P11: sequence parallelism is a large win for attention
         # stacks but a 40-50x collective REGRESSION for SSM/hybrid — the
@@ -183,12 +184,16 @@ def build_train_cell(arch: ArchConfig, shape: ShapeConfig, mesh,
     out_sh = (to_shardings(state_specs), None)
 
     args = (base_abs, state_abs, batch_abs, w_abs, w_abs, lr_abs, lr_abs)
+    # overlap_comm is a host-side clock model (SplitFTSystem's event
+    # loop), not an engine knob: it never changes the lowered step, so
+    # it rides in `info` for provenance only
     return Cell(step, args, in_sh, out_sh, donate_argnums=(1,),
                 model=model,
                 info={"kind": "train", "num_clients": n,
                       "per_client_batch": arch.train.batch_size,
                       "microbatch": microbatch, "scheduler": scheduler,
-                      "max_local_steps": k_steps})
+                      "max_local_steps": k_steps,
+                      "overlap_comm": overlap_comm})
 
 
 def _state_specs(state_abs, mesh):
@@ -287,4 +292,5 @@ def build_cell(arch: ArchConfig, shape: ShapeConfig, mesh, **kw) -> Cell:
     kw.pop("num_clients", None)
     kw.pop("scheduler", None)
     kw.pop("max_local_steps", None)
+    kw.pop("overlap_comm", None)
     return build_serve_cell(arch, shape, mesh, **kw)

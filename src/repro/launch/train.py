@@ -60,6 +60,13 @@ def main(argv=None):
     ap.add_argument("--staleness-power", type=float, default=None,
                     help="--scheduler async: (1+staleness)^-p weight "
                          "discount (0 disables)")
+    ap.add_argument("--overlap-comm", action="store_true", default=None,
+                    help="pipeline the comm phases on the simulated "
+                         "clock: uplink of step k overlaps compute of "
+                         "k+1 (double-buffered); default: the arch "
+                         "config's choice")
+    ap.add_argument("--no-overlap-comm", dest="overlap_comm",
+                    action="store_false")
     ap.add_argument("--straggler-sim", action="store_true")
     ap.add_argument("--samples", type=int, default=2000)
     ap.add_argument("--out", default="runs/train")
@@ -104,6 +111,7 @@ def main(argv=None):
         deadline_frac=args.deadline_frac,
         buffer_size=args.buffer_size,
         staleness_power=args.staleness_power,
+        overlap_comm=args.overlap_comm,
         straggler_sim=args.straggler_sim,
         checkpoint_dir=os.path.join(args.out, "ckpt"),
         checkpoint_every=max(args.rounds // 5, 1))

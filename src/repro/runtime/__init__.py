@@ -2,5 +2,8 @@ from repro.runtime.sharding import (  # noqa: F401
     batch_specs, cache_specs, fit_spec, param_specs, adapter_specs,
     shardings_for,
 )
-from repro.runtime.straggler import SpeedModel, deadline_survivors  # noqa: F401
+from repro.runtime.straggler import (  # noqa: F401
+    PHASES, SpeedModel, deadline_survivors, pipelined_makespan,
+    serial_step_times,
+)
 from repro.runtime.elastic import ClientPool  # noqa: F401

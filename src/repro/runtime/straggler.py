@@ -14,7 +14,19 @@ deliverable and transfer unchanged to physical deployments:
     K_i * t_i lands near the barrier (consumed by the local_steps
     scheduler, repro.core.scheduler);
   * adaptive cut (paper C3) doubles as straggler mitigation: slow clients
-    shed layers, directly reducing their round time.
+    shed layers, directly reducing their round time;
+  * overlapped communication — a split-learning step is not one opaque
+    duration but a PIPELINE of phases (client compute -> f2 uplink ->
+    server compute -> f4 gradient downlink -> adapter sync).  With
+    double buffering the client may compute step k+1 while step k's
+    transfers are in flight, so wire time hides behind compute instead
+    of adding to it.  `SpeedModel.phase_times` exposes the per-phase
+    durations; `pipelined_makespan` is the double-buffered clock the
+    overlap-aware schedulers charge.
+
+The phase decomposition mirrors comm.py's per-channel byte split:
+f2/f4 are the smashed-activation channel (one uplink + one downlink per
+local step), adapter sync is the b1/b3 channel.
 """
 
 from __future__ import annotations
@@ -23,6 +35,12 @@ import dataclasses
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
+
+# Phase order of one split-learning local step.  `phase_times` returns
+# one row per entry; the serial clock is the column sum; the event-queue
+# host loop tags its events with these names.
+PHASES = ("client_compute", "f2_uplink", "server_compute",
+          "f4_downlink", "adapter_sync")
 
 
 @dataclasses.dataclass
@@ -36,6 +54,9 @@ class SpeedModel:
     bw_mean: float = 100e6          # 100 MB/s WAN-ish uplink
     bw_sigma: float = 0.7
     jitter_sigma: float = 0.1       # per-round multiplicative noise
+    server_flops_per_s: float = 0.0  # 0 -> server compute is free (the
+                                     # datacenter server is never the
+                                     # bottleneck; legacy clock parity)
 
     def __post_init__(self):
         rng = np.random.RandomState(self.seed)
@@ -44,23 +65,151 @@ class SpeedModel:
         self.bandwidth = self.bw_mean * np.exp(
             rng.normal(0.0, self.bw_sigma, self.num_clients))
 
-    def round_times(self, *, cuts: Sequence[int], flops_per_layer: float,
+    def phase_times(self, *, cuts: Sequence[int], flops_per_layer: float,
                     smashed_bytes: float, adapter_bytes: Sequence[float],
-                    round_idx: int = 0,
-                    ref_flops_per_s: float = 5e12) -> np.ndarray:
-        """Wall-clock estimate per client for one round.
+                    round_idx: int = 0, ref_flops_per_s: float = 5e12,
+                    server_layers: Optional[Sequence[int]] = None,
+                    smashed_down_bytes: Optional[float] = None
+                    ) -> np.ndarray:
+        """(5, N) per-client phase durations for one local step.
 
-        compute = cut_i layers of forward+backward on the client device;
-        comm = smashed fwd+bwd (2x) + adapter sync, at client bandwidth."""
+        Rows follow `PHASES`: client compute (cut_i layers of
+        forward+backward on the client device), f2 smashed uplink,
+        server compute ((L - cut_i) layers at `server_flops_per_s`; zero
+        when that rate is 0 — the legacy model), f4 gradient downlink
+        (`smashed_down_bytes`; defaults to the uplink size — every
+        current compressor is symmetric), and the b1/b3 adapter sync.
+        The per-round jitter draw scales every phase, so the serial
+        column sum preserves the legacy single-duration clock's
+        semantics."""
         rng = np.random.RandomState(round_idx * 7919 + self.seed)
         jitter = np.exp(rng.normal(0.0, self.jitter_sigma,
                                    self.num_clients))
         cuts = np.asarray(cuts, np.float64)
-        compute = cuts * flops_per_layer * 3.0 / \
-            (ref_flops_per_s * self.speed)
-        comm = (2.0 * smashed_bytes + np.asarray(adapter_bytes)) \
-            / self.bandwidth
-        return (compute + comm) * jitter
+        client = cuts * flops_per_layer * 3.0 / \
+            (ref_flops_per_s * self.speed) * jitter
+        down = (smashed_bytes if smashed_down_bytes is None
+                else smashed_down_bytes)
+        f2 = smashed_bytes / self.bandwidth * jitter
+        f4 = down / self.bandwidth * jitter
+        adapter = np.asarray(adapter_bytes, np.float64) \
+            / self.bandwidth * jitter
+        if self.server_flops_per_s > 0 and server_layers is not None:
+            server = np.asarray(server_layers, np.float64) \
+                * flops_per_layer * 3.0 / self.server_flops_per_s * jitter
+        else:
+            server = np.zeros(self.num_clients, np.float64)
+        return np.stack([client, f2, server, f4, adapter])
+
+    def round_times(self, *, cuts: Sequence[int], flops_per_layer: float,
+                    smashed_bytes: float, adapter_bytes: Sequence[float],
+                    round_idx: int = 0,
+                    ref_flops_per_s: float = 5e12) -> np.ndarray:
+        """Serial wall-clock estimate per client for one round: the
+        column sum of `phase_times` (compute, then each wire phase back
+        to back — no overlap)."""
+        return serial_step_times(self.phase_times(
+            cuts=cuts, flops_per_layer=flops_per_layer,
+            smashed_bytes=smashed_bytes, adapter_bytes=adapter_bytes,
+            round_idx=round_idx, ref_flops_per_s=ref_flops_per_s))
+
+
+def serial_step_times(phases: np.ndarray) -> np.ndarray:
+    """(5, N) phase durations -> (N,) serial one-step times.
+
+    THE canonical serial reduction: every scheduler that charges
+    un-overlapped steps must sum phases through this helper so the
+    barrier and event-queue clocks stay bitwise comparable."""
+    out = np.zeros(phases.shape[1], np.float64)
+    for row in np.asarray(phases, np.float64):
+        out = out + row
+    return out
+
+
+def pipelined_makespan(phases: np.ndarray,
+                       steps: Sequence[int]) -> np.ndarray:
+    """(N,) makespan of `steps[i]` pipelined local steps per client.
+
+    Double-buffered overlap with one outstanding transfer per direction:
+    compute of step k may start once compute of k-1 is done AND step k-2
+    has fully completed (its f4 gradient applied and adapters synced), so
+    at most two steps are ever in flight and the client trains at
+    staleness <= 1.  Each channel (f2 uplink, f4 downlink, adapter sync)
+    serializes its own transfers.  With zero wire time this degenerates
+    to the serial compute chain bitwise; with zero compute it degenerates
+    to back-to-back transfers."""
+    phases = np.asarray(phases, np.float64)
+    steps = np.asarray(steps, np.int64)
+    c, u, s, d, a = phases
+    n = phases.shape[1]
+    out = np.zeros(n, np.float64)
+    for i in range(n):
+        ec = eu = ed = ea = 0.0     # last end per resource
+        ea_km1 = ea_km2 = 0.0       # end_A(k-1) / end_A(k-2)
+        for _ in range(int(steps[i])):
+            sc = max(ec, ea_km2)
+            ec = sc + c[i]
+            su = max(ec, eu)
+            eu = su + u[i]
+            es = eu + s[i]
+            sd = max(es, ed)
+            ed = sd + d[i]
+            sa = max(ed, ea)
+            ea = sa + a[i]
+            ea_km2 = ea_km1
+            ea_km1 = ea
+        out[i] = ea
+    return out
+
+
+def overlap_step_budgets(phases: np.ndarray, *, max_steps: int,
+                         active: Optional[np.ndarray] = None
+                         ) -> np.ndarray:
+    """Per-client budgets under the overlapped pipeline: the largest
+    K_i <= max_steps whose pipelined makespan still fits the sync
+    barrier t_max (the slowest active client's serial one-step time).
+
+    Pipelining makes extra steps cheaper than serial ones (wire time
+    hides behind compute), so K_i here is >= the serial
+    `local_step_budgets` everywhere — fast clients pack MORE useful
+    steps into the same barrier instead of finishing early.  With zero
+    wire time the makespan is the serial compute chain and the budgets
+    coincide with the serial rule's (up to fp rounding at exact barrier
+    multiples).  Inactive clients get budget 0."""
+    phases = np.asarray(phases, np.float64)
+    t = serial_step_times(phases)
+    act = (np.ones_like(t) if active is None
+           else np.asarray(active, np.float64))
+    sel = act > 0
+    if not sel.any():
+        return np.zeros(t.shape, np.int64)
+    t_max = float(t[sel].max())
+    c, u, s, d, a = phases
+    budgets = np.zeros(t.shape, np.int64)
+    for i in np.where(sel)[0]:
+        # extend one incremental recurrence (identical arithmetic to
+        # pipelined_makespan) and stop at the first k past the barrier:
+        # the makespan is monotone in k
+        ec = eu = ed = ea = 0.0
+        ea_km1 = ea_km2 = 0.0
+        best = 1
+        for k in range(1, max_steps + 1):
+            sc = max(ec, ea_km2)
+            ec = sc + c[i]
+            su = max(ec, eu)
+            eu = su + u[i]
+            es = eu + s[i]
+            sd = max(es, ed)
+            ed = sd + d[i]
+            sa = max(ed, ea)
+            ea = sa + a[i]
+            ea_km2 = ea_km1
+            ea_km1 = ea
+            if ea > t_max:
+                break
+            best = k
+        budgets[i] = best
+    return budgets
 
 
 def local_step_budgets(times: np.ndarray, *, max_steps: int,
@@ -83,14 +232,24 @@ def local_step_budgets(times: np.ndarray, *, max_steps: int,
     return np.where(sel, k, 0)
 
 
-def deadline_survivors(times: np.ndarray, *, deadline_frac: float = 1.5
+def deadline_survivors(times: np.ndarray, *, deadline_frac: float = 1.5,
+                       active: Optional[np.ndarray] = None
                        ) -> Tuple[np.ndarray, float]:
     """Clients finishing within deadline_frac x median time survive.
 
-    Returns (bool mask, deadline).  Always keeps at least one client."""
-    med = float(np.median(times))
+    The median — and therefore the deadline — is computed over ACTIVE
+    clients only: a departed (elastic-leave) client's stale time estimate
+    must not skew the deadline and evict healthy survivors.  Returns
+    (bool mask restricted to active clients, deadline).  Always keeps at
+    least one active client (the fastest)."""
+    t = np.asarray(times, np.float64)
+    act = (np.ones(t.shape, bool) if active is None
+           else np.asarray(active, np.float64) > 0)
+    if not act.any():
+        return np.zeros(t.shape, bool), 0.0
+    med = float(np.median(t[act]))
     deadline = deadline_frac * med
-    mask = times <= deadline
+    mask = act & (t <= deadline)
     if not mask.any():
-        mask = times == times.min()
+        mask = act & (t == t[act].min())
     return mask, deadline

@@ -81,6 +81,43 @@ def test_local_step_budgets_respects_membership_and_cap():
     assert k[2] == 12                     # floor(100/8)
 
 
+def test_deadline_plan_ignores_inactive_clients():
+    """Regression (ISSUE 5): departed clients' stale time estimates must
+    not skew the deadline.  Here three fast leavers drag the full-fleet
+    median to 5.5 (deadline 8.25) — under the old behaviour NO active
+    client survives and the fallback resurrects an INACTIVE client,
+    leaving the round empty after the active-mask intersection.  With
+    the median over active clients only, the deadline is 16.5 and the
+    two healthy survivors stay."""
+    s = scheduler_lib.make_scheduler("deadline", deadline_frac=1.5)
+    times = np.array([10.0, 11.0, 30.0, 1.0, 1.0, 1.0])
+    active = np.array([1.0, 1.0, 1.0, 0.0, 0.0, 0.0])
+    plan = s.plan(active=active, times=times)
+    assert plan.active.tolist() == [1, 1, 0, 0, 0, 0]
+    assert plan.deadline == pytest.approx(16.5)
+    assert plan.sim_time == 11.0          # last active survivor
+
+
+def test_deadline_survivors_active_unit():
+    from repro.runtime.straggler import deadline_survivors
+    t = np.array([4.0, 2.0, 100.0])
+    # no mask -> whole fleet (legacy behaviour)
+    m, d = deadline_survivors(t, deadline_frac=1.5)
+    assert m.tolist() == [True, True, False]  # median 4 -> deadline 6
+    assert d == pytest.approx(6.0)
+    # the fallback keeps the fastest ACTIVE client, never a departed one
+    m, d = deadline_survivors(t, deadline_frac=0.1,
+                              active=np.array([1.0, 0.0, 1.0]))
+    assert m.tolist() == [True, False, False]
+    # an inactive client is never a survivor
+    m, _ = deadline_survivors(t, deadline_frac=100.0,
+                              active=np.array([0.0, 1.0, 1.0]))
+    assert m.tolist() == [False, True, True]
+    # empty pool -> nobody survives (no crash)
+    m, d = deadline_survivors(t, active=np.zeros(3))
+    assert not m.any() and d == 0.0
+
+
 def test_unknown_scheduler_raises():
     with pytest.raises(ValueError):
         scheduler_lib.make_scheduler("gossip")
@@ -493,6 +530,70 @@ def test_async_shrunken_pool_raises_instead_of_hanging():
     sys_.pool.leave(0)
     with pytest.raises(RuntimeError, match="never fill"):
         sys_.run(1, log_every=0)
+
+
+@pytest.mark.parametrize("overlap", [False, True])
+def test_async_elastic_leave_drops_events_and_rejoin_reenters(overlap):
+    """Regression (ISSUE 5): a client that leaves mid-flight must not
+    keep ticking as a zombie — its pending events are dropped, it is
+    never relaunched, and its launch counter freezes; on rejoin it
+    re-enters at the current clock and contributes again.  The queue's
+    client set tracks the active fleet throughout."""
+    const = dict(speed_sigma=0.0, bw_sigma=0.0, jitter_sigma=0.0)
+    cfg = SystemConfig(scheduler="async", buffer_size=2, adaptive=False,
+                       overlap_comm=overlap, **const, **SYS)
+    sys_ = SplitFTSystem(small_arch(), cfg, seed=0)
+    sys_.run(2, log_every=0)
+    sched = sys_.scheduler
+
+    sys_.pool.leave(1)
+    frozen = int(sched.launches[1])
+    h = sys_.run(3, log_every=0)
+    assert sched.queue.clients() == {0, 2}      # no zombie events
+    assert int(sched.launches[1]) == frozen     # never relaunched
+    for rec in h[-3:]:
+        assert rec["round_steps"][1] == 0       # never contributed
+        assert rec["active"][1] == 0.0
+
+    sys_.pool.join(1)
+    h = sys_.run(3, log_every=0)
+    assert sched.queue.clients() == {0, 1, 2}   # re-entered at the clock
+    assert int(sched.launches[1]) > frozen      # training again
+    # with a constant-speed fleet the rejoiner lands in a flush again
+    assert any(rec["round_steps"][1] > 0 for rec in h[-3:])
+    clocks = [rec["sim_clock"] for rec in sys_.history]
+    assert all(b >= a for a, b in zip(clocks, clocks[1:]))
+    assert np.isfinite(h[-1]["loss"])
+
+
+def test_async_flush_times_drawn_at_launch_indices():
+    """Regression (ISSUE 5): the flush record's `round_time_sim` must be
+    the serial step time each contributor experienced at ITS launch
+    index — not a fresh full-fleet draw at the aggregation-round index,
+    which no client's tick ever used.  With per-launch jitter the two
+    disagree unless the record tracks actual launches."""
+    from repro.runtime.straggler import serial_step_times
+
+    cfg = SystemConfig(scheduler="async", buffer_size=2, adaptive=False,
+                       jitter_sigma=0.3, **SYS)
+    sys_ = SplitFTSystem(small_arch(), cfg, seed=3)
+    hist = sys_.run(4, log_every=0)
+    sched = sys_.scheduler
+    cuts_np = np.asarray(sys_.state["cuts"])
+    cb = sys_._cached_comm(cuts_np)
+    # after the run, each client's recorded time equals the draw at the
+    # launch index it last completed (launches[i] - 1)
+    last = hist[-1]["round_time_sim"]
+    for i in range(3):
+        launch = int(sched.launches[i]) - 1
+        if launch < 0:
+            continue
+        t_i = serial_step_times(
+            sys_._cached_phases(launch, cuts_np, cb))[i]
+        assert last[i] == t_i
+    # and clients complete at DIFFERENT launch indices under async, so
+    # a single aggregation-round draw could not have produced this
+    assert len({int(k) for k in sched.launches}) > 1
 
 
 def test_smashed_ef_frozen_for_inactive_clients():

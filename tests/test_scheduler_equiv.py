@@ -190,3 +190,253 @@ def test_sync_barrier_clock_is_cumulative_barrier_maxima():
         assert h["sim_time"] == pytest.approx(h["round_time_sim"].max())
         expect += h["sim_time"]
         assert h["sim_clock"] == pytest.approx(expect)
+
+
+# ---------------------------------------------------------------------------
+# overlapped communication: phase decomposition + pipeline clock (ISSUE 5)
+
+
+def test_phase_times_serial_reduction_pins_legacy_clock():
+    """The serial clock is the ordered phase sum — pinned bitwise against
+    an independent closed-form reimplementation so neither the phase
+    decomposition nor the reduction order can silently drift."""
+    from repro.runtime.straggler import (SpeedModel, pipelined_makespan,
+                                         serial_step_times)
+
+    sm = SpeedModel(6, seed=7)
+    kw = dict(cuts=[1, 2, 3, 2, 1, 4], flops_per_layer=3e9,
+              smashed_bytes=2e6, adapter_bytes=[1e5] * 6, round_idx=5)
+    phases = sm.phase_times(**kw)
+    assert phases.shape == (5, 6)
+
+    rng = np.random.RandomState(5 * 7919 + 7)
+    jitter = np.exp(rng.normal(0.0, sm.jitter_sigma, 6))
+    compute = np.asarray(kw["cuts"], np.float64) * 3e9 * 3.0 \
+        / (5e12 * sm.speed) * jitter
+    wire = 2e6 / sm.bandwidth * jitter
+    adapter = np.asarray(kw["adapter_bytes"], np.float64) \
+        / sm.bandwidth * jitter
+    np.testing.assert_array_equal(phases[0], compute)
+    np.testing.assert_array_equal(phases[1], wire)     # f2 uplink
+    np.testing.assert_array_equal(phases[2], 0.0)      # free server
+    np.testing.assert_array_equal(phases[3], wire)     # f4 downlink
+    np.testing.assert_array_equal(phases[4], adapter)  # b1/b3 sync
+
+    # round_times IS the serial reduction, in phase order, bitwise
+    expect = ((((compute + wire) + np.zeros(6)) + wire) + adapter)
+    np.testing.assert_array_equal(sm.round_times(**kw), expect)
+    np.testing.assert_array_equal(serial_step_times(phases), expect)
+    # one pipelined step cannot overlap with anything: K=1 == serial
+    np.testing.assert_array_equal(
+        pipelined_makespan(phases, np.ones(6, np.int64)), expect)
+
+
+def test_pipelined_makespan_bounds():
+    """K pipelined steps: never slower than serial/step-count bounds,
+    never faster than the double-buffer floor (staleness <= 1 means at
+    most 2 steps in flight -> makespan >= K/2 serial steps), and exact
+    degenerate forms at zero wire / zero compute."""
+    from repro.runtime.straggler import (SpeedModel, pipelined_makespan,
+                                         serial_step_times)
+
+    sm = SpeedModel(5, seed=11, jitter_sigma=0.0)
+    kw = dict(cuts=[2] * 5, flops_per_layer=5e9, smashed_bytes=4e6,
+              adapter_bytes=[2e5] * 5)
+    phases = sm.phase_times(**kw)
+    serial = serial_step_times(phases)
+    for k in (1, 2, 3, 7):
+        steps = np.full(5, k, np.int64)
+        span = pipelined_makespan(phases, steps)
+        assert (span <= k * serial + 1e-12).all()
+        assert (span >= np.ceil(k / 2) * serial - 1e-12).all()
+        assert (span >= k * phases[0] - 1e-12).all()   # compute-bound
+        if k > 1:
+            assert (span < k * serial).all()           # overlap pays
+
+    # zero wire -> pure compute chain, bitwise
+    zero_wire = phases.copy()
+    zero_wire[1:] = 0.0
+    np.testing.assert_array_equal(
+        pipelined_makespan(zero_wire, np.full(5, 4, np.int64)),
+        4.0 * zero_wire[0])
+    # zero compute -> back-to-back transfers on the serialized channels
+    zero_comp = phases.copy()
+    zero_comp[0] = 0.0
+    span = pipelined_makespan(zero_comp, np.full(5, 4, np.int64))
+    assert (span >= 4.0 * np.max(zero_comp[1:], axis=0) - 1e-12).all()
+
+
+def test_local_steps_overlap_packs_more_steps_into_the_barrier():
+    """Under overlap, pipelined steps are cheaper than serial ones, so
+    the budget rule fits MORE local steps inside the same sync barrier
+    (t_max, set by the slowest client's single serial step).  Synthetic
+    phases make the gain exact: the fast client's serial step costs 3s
+    (1 compute + 2 wire) but its pipeline settles into ~1.5s/step, so
+    the 9s barrier fits 5 pipelined steps vs 3 serial ones."""
+    from repro.runtime.straggler import (local_step_budgets,
+                                         overlap_step_budgets,
+                                         pipelined_makespan,
+                                         serial_step_times)
+
+    # rows: client_compute, f2_up, server, f4_down, adapter_sync
+    phases = np.array([[1.0, 9.0],
+                       [1.0, 0.0],
+                       [0.0, 0.0],
+                       [1.0, 0.0],
+                       [0.0, 0.0]])
+    times = serial_step_times(phases)
+    np.testing.assert_array_equal(times, [3.0, 9.0])
+    serial_b = local_step_budgets(times, max_steps=8)
+    overlap_b = overlap_step_budgets(phases, max_steps=8)
+    np.testing.assert_array_equal(serial_b, [3, 1])
+    np.testing.assert_array_equal(overlap_b, [5, 1])
+    # overlap budgets never fall below serial and still fit the barrier
+    assert (overlap_b >= serial_b).all()
+    span = pipelined_makespan(phases, overlap_b)
+    assert (span <= times.max()).all()
+
+    serial_sched = scheduler_lib.make_scheduler("local_steps",
+                                                max_local_steps=8)
+    overlap_sched = scheduler_lib.make_scheduler(
+        "local_steps", max_local_steps=8, overlap_comm=True)
+    p_serial = serial_sched.plan(active=np.ones(2), times=times,
+                                 phases=phases)
+    p_overlap = overlap_sched.plan(active=np.ones(2), times=times,
+                                   phases=phases)
+    np.testing.assert_array_equal(p_overlap.step_budgets, overlap_b)
+    assert p_overlap.sim_time == pytest.approx(9.0)   # still the barrier
+    assert (p_overlap.step_budgets >= p_serial.step_budgets).all()
+    # without phases the overlap scheduler falls back to the serial rule
+    p_fallback = overlap_sched.plan(active=np.ones(2), times=times)
+    np.testing.assert_array_equal(p_fallback.step_budgets, serial_b)
+    assert p_fallback.sim_time == p_serial.sim_time
+
+
+# a zero-wire fleet: infinite bandwidth makes every transfer phase
+# exactly 0.0 s, so the pipeline has nothing to hide and must reproduce
+# the serial clock bit for bit
+ZERO_WIRE = dict(bw_mean=float("inf"), bw_sigma=0.0)
+
+
+def test_async_overlap_zero_wire_reduces_to_serial_bitwise():
+    """overlap_comm=True with zero wire time IS today's serial clock:
+    losses, per-flush clocks and adapter trees all bitwise equal under
+    genuinely heterogeneous compute speeds."""
+    n_rounds = 4
+    runs = {}
+    for ov in (False, True):
+        s = SplitFTSystem(
+            small_arch(),
+            SystemConfig(scheduler="async", buffer_size=2,
+                         adaptive=False, overlap_comm=ov, **ZERO_WIRE,
+                         **SYS),
+            seed=3)
+        runs[ov] = (s, s.run(n_rounds, log_every=0))
+    (s_ser, h_ser), (s_ov, h_ov) = runs[False], runs[True]
+    for a, b in zip(h_ser, h_ov):
+        assert a["loss"] == b["loss"]                   # bitwise
+        assert a["sim_clock"] == b["sim_clock"]
+        assert a["sim_time"] == b["sim_time"]
+        np.testing.assert_array_equal(a["active"], b["active"])
+        np.testing.assert_array_equal(a["round_time_sim"],
+                                      b["round_time_sim"])
+    assert adapter_digest(s_ser.state) == adapter_digest(s_ov.state)
+
+
+def test_async_overlap_with_wire_strictly_faster():
+    """With nonzero wire time the pipeline hides transfers behind
+    compute: every flush lands no later than serial and the run finishes
+    strictly earlier.  Training numerics are NOT asserted equal — the
+    event ORDER legitimately changes under heterogeneity."""
+    n_rounds = 5
+    clocks = {}
+    for ov in (False, True):
+        s = SplitFTSystem(
+            small_arch(),
+            SystemConfig(scheduler="async", buffer_size=2,
+                         adaptive=False, overlap_comm=ov, **SYS),
+            seed=3)
+        h = s.run(n_rounds, log_every=0)
+        clocks[ov] = [rec["sim_clock"] for rec in h]
+    for t_ov, t_ser in zip(clocks[True], clocks[False]):
+        assert t_ov <= t_ser
+    assert clocks[True][-1] < clocks[False][-1]
+
+
+def test_async_overlap_checkpoint_roundtrip_mid_pipeline():
+    """Save while phase events are in flight; the restored system must
+    replay the identical event stream (pipeline bookkeeping, channel
+    busy-until times and phase-tagged queue keys all round-trip)."""
+    import tempfile
+
+    arch = small_arch()
+    with tempfile.TemporaryDirectory() as d:
+        cfg = SystemConfig(scheduler="async", buffer_size=2,
+                           adaptive=False, overlap_comm=True,
+                           checkpoint_dir=d, **SYS)
+        s1 = SplitFTSystem(arch, cfg, seed=3)
+        s1.run(2, log_every=0)
+        s1.save(7)
+        s2 = SplitFTSystem(arch, cfg, seed=3)
+        assert s2.restore()
+        assert s2.scheduler.queue.state_dict() == \
+            s1.scheduler.queue.state_dict()
+        np.testing.assert_array_equal(s2.scheduler.csched,
+                                      s1.scheduler.csched)
+        h1 = s1.run(2, log_every=0)
+        h2 = s2.run(2, log_every=0)
+        for a, b in zip(h1[-2:], h2[-2:]):
+            assert a["loss"] == b["loss"]
+            assert a["sim_clock"] == b["sim_clock"]
+        assert adapter_digest(s1.state) == adapter_digest(s2.state)
+
+
+def test_async_overlap_priced_server_stays_coherent():
+    """With a priced server phase (`server_flops_per_s`) and per-launch
+    jitter, every per-client stage — including the server lane — is
+    serialized, so steps complete in launch order and the simulation
+    stays monotone; the server phase visibly lengthens the clock vs the
+    free-server default."""
+    kw = dict(scheduler="async", buffer_size=2, adaptive=False,
+              overlap_comm=True, jitter_sigma=0.4)
+    free = SplitFTSystem(small_arch(),
+                         SystemConfig(**kw, **SYS), seed=5)
+    h_free = free.run(4, log_every=0)
+    priced = SplitFTSystem(
+        small_arch(),
+        SystemConfig(server_flops_per_s=1e10, **kw, **SYS), seed=5)
+    h_priced = priced.run(4, log_every=0)
+    for h in h_priced:
+        assert np.isfinite(h["loss"])
+        assert h["sim_time"] > 0
+    clocks = [h["sim_clock"] for h in h_priced]
+    assert all(b >= a for a, b in zip(clocks, clocks[1:]))
+    # a non-free server can only slow the simulation down
+    assert h_priced[-1]["sim_clock"] > h_free[-1]["sim_clock"]
+
+
+def test_event_queue_phase_keys_and_membership():
+    """Phase-tagged (client, phase, launch) keys: ordering within a tie
+    puts a step's completion before the same client's next compute;
+    discard_client drops every phase of a leaver; tuple keys round-trip
+    through state_dict."""
+    q = scheduler_lib.EventQueue()
+    q.push((1, "client_compute", 3), 2.0)
+    q.push((0, "adapter_sync", 2), 2.0)
+    q.push((0, "client_compute", 3), 2.0)
+    q.push((2, "f2_uplink", 1), 5.0)
+    assert q.clients() == {0, 1, 2}
+    t, who = q.pop_next()
+    assert t == 2.0
+    assert who == [(0, "adapter_sync", 2), (0, "client_compute", 3),
+                   (1, "client_compute", 3)]
+    assert q.discard_client(2) == 1
+    assert len(q) == 0 and q.clients() == set()
+
+    q = scheduler_lib.EventQueue(now=1.5)
+    q.push((4, "f4_downlink", 9), 2.5)
+    q.push(3, 2.0)                        # legacy int key still accepted
+    q2 = scheduler_lib.EventQueue.from_state_dict(q.state_dict())
+    assert q2.now == q.now
+    assert q2.pop_next() == (2.0, [3])
+    assert q2.pop_next() == (2.5, [(4, "f4_downlink", 9)])
