@@ -3,13 +3,73 @@
  baseline: fixed cut=2 for all clients, IID data (the paper's Same Split);
  splitft:  adaptive cuts under length-Dirichlet with
            alpha in {0.1, 0.9, 10, 100} and IID.
+
+Plus the controller comparison (ROADMAP item 3): the accuracy-only C3
+rule vs the phase-time co-controller (cut x rank x compressor) on the
+same simulated straggler fleet, scored by SIMULATED time-to-target —
+the wall-clock the fleet needs to first push the per-round loss down to
+the WORSE of the two runs' final losses (the bench_scheduler
+convention, so both lanes reach the target by construction).
+jitter_sigma=0 keeps the clock deterministic, so the comparison is
+exactly reproducible.
 """
 
 from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import bench_arch, row, run_experiment
+import numpy as np
+
+from benchmarks.common import DRYRUN, EVAL_SAMPLES, ROUNDS, SAMPLES, \
+    bench_arch, row, run_experiment
+from repro.core.system import SystemConfig
+
+
+def _sim_time_to_target(hist, target_loss: float) -> float:
+    """Cumulative simulated round time until the per-round loss first
+    drops to `target_loss` (total time when never reached)."""
+    t = 0.0
+    for h in hist:
+        t += float(h["sim_time"])
+        if float(h["loss"]) <= target_loss:
+            break
+    return t
+
+
+def _controller_rows() -> List[dict]:
+    arch = bench_arch(cut=2, adaptive=True, partition="iid")
+    lora = arch.lora
+    rank_buckets = tuple(sorted({max(1, lora.r_cut // 2), lora.r_cut,
+                                 min(lora.r_others, 2 * lora.r_cut)}))
+    common = dict(num_samples=SAMPLES, eval_samples=EVAL_SAMPLES,
+                  straggler_sim=True, jitter_sigma=0.0)
+    # dry-run's 2 rounds leave the controller a single move; give the
+    # comparison lanes a few more so the co-controller's choices are
+    # actually on the simulated clock
+    rounds = 4 if DRYRUN else ROUNDS
+    acc_res = run_experiment(arch, rounds=rounds, sys_cfg=SystemConfig(
+        controller="accuracy", **common))
+    co_res = run_experiment(arch, rounds=rounds, sys_cfg=SystemConfig(
+        controller="co", rank_buckets=rank_buckets,
+        compressor_buckets=("none", "int8", "topk"), **common))
+    target = max(float(acc_res["history"][-1]["loss"]),
+                 float(co_res["history"][-1]["loss"]))
+    rows = []
+    for name, res in (("adaptive/c3_accuracy_timed", acc_res),
+                      ("adaptive/c3_co_controller", co_res)):
+        r = row(name, res)
+        r["target_loss"] = target
+        r["sim_time_to_target"] = _sim_time_to_target(res["history"],
+                                                      target)
+        r["sim_time_total"] = float(sum(h["sim_time"]
+                                        for h in res["history"]))
+        r["final_loss"] = float(res["history"][-1]["loss"])
+        last = res["history"][-1]
+        if "rank_cut" in last:
+            r["rank_cut"] = last["rank_cut"].tolist()
+            r["smashed_choice"] = last["smashed_choice"].tolist()
+        rows.append(r)
+    return rows
 
 
 def run() -> List[dict]:
@@ -27,6 +87,7 @@ def run() -> List[dict]:
                           alpha=alpha)
         res = run_experiment(arch)
         rows.append(row(f"adaptive/splitft_alpha={alpha}", res))
+    rows.extend(_controller_rows())
     return rows
 
 

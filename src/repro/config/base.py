@@ -260,6 +260,22 @@ class SplitConfig:
     # step k hides behind compute of k+1.  False = the legacy serial
     # clock (phases charged back to back).
     overlap_comm: bool = False
+    # C3 controller: "accuracy" = the paper's accuracy-only cut rule;
+    # "co" = the phase-time co-controller — per client, pick the (cut
+    # bucket, rank-at-cut bucket, smashed compressor) triple minimizing
+    # the PREDICTED pipelined makespan (SpeedModel.phase_times over
+    # comm.py bytes), with accuracy gating direction via the dead-band
+    # (repro.core.adaptive.co_adjust).
+    controller: str = "accuracy"
+    rank_buckets: Tuple[int, ...] = ()       # rank-at-cut search set;
+                                             # empty -> (lora.r_cut,)
+    compressor_buckets: Tuple[str, ...] = () # smashed-compressor search
+                                             # set; empty ->
+                                             # (smashed_compress,)
+    acc_dead_band: float = 0.002             # accuracy dead-band half-width
+    min_gain: float = 0.05                   # relative predicted-makespan
+                                             # improvement required to move
+                                             # (co_adjust hysteresis)
 
     def buckets(self, num_layers: int) -> Tuple[int, ...]:
         if self.cut_buckets:

@@ -1,21 +1,44 @@
-"""Adaptive layer allocation (paper C3).
+"""Adaptive layer allocation (paper C3) and the co-controller.
 
 Weight rule (paper §III-C):
     acc_i > acc_avg:  w_i = 1 + gamma * (acc_i - acc_avg)
     acc_i < acc_avg:  w_i = 1 - gamma * (acc_avg - acc_i)
 (one expression: w_i = 1 + gamma * (acc_i - acc_avg), clipped positive).
 
-Cut adjustment: clients whose accuracy exceeds the fleet average take MORE
-layers (they "assume greater computational responsibilities"); clients
-below average shed layers.  Movement is restricted to the config's static
-cut-bucket set, one bucket per round, with a dead-band so noise does not
-thrash the allocation.  Buckets keep the policy compatible with the
-mask-based split: any bucket assignment runs in the same executable.
+Two controllers share the weight rule:
+
+  * `adjust_cuts` — the paper's accuracy-only rule: clients above the
+    fleet-average accuracy take MORE layers ("assume greater computational
+    responsibilities"); clients below shed layers, two buckets at once if
+    they are also straggler-slow.
+  * `co_adjust` — the phase-time co-controller (ROADMAP item 3): per
+    client it picks the (cut bucket, rank-at-cut bucket, smashed
+    compressor) triple minimizing the PREDICTED pipelined makespan
+    (SpeedModel.phase_times over comm.py's per-channel bytes), subject to
+    the same accuracy dead-band so quality still gates direction:
+      - below the band: a forced quality-recovery move (cut down, rank up
+        one bucket, compression one step weaker) — never the argmin,
+        because quality moves cost time by construction;
+      - inside the band: the cut holds and only (rank, compressor) are
+        searched;
+      - above the band: the cut may additionally rise one bucket.
+    A relative-improvement threshold (`min_gain`) adds hysteresis: the
+    assignment only moves when the predicted makespan drops by at least
+    that fraction, so prediction noise cannot thrash the triple.
+
+Movement is always restricted to the config's static bucket sets; cut,
+rank and compressor choice are all *data* to the round engine (mask
+arrays / index arrays), so any assignment runs in the same executable.
+
+Pricing is delegated to the caller through the `price` callable so the
+controller stays import-light (numpy only) and the system layer can feed
+it the exact same SpeedModel + comm accounting it charges the simulated
+clock with — which is what makes predicted == simulated testable.
 """
 
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -29,25 +52,42 @@ def update_weights(accs: Sequence[float], gamma: float) -> np.ndarray:
     return np.clip(w, 0.05, None)
 
 
+def _straggler_mask(round_times, active_mask) -> np.ndarray:
+    """Clients slower than 1.5x the median of ACTIVE clients' times.
+
+    Restricting the median to active clients mirrors the PR 5
+    deadline_survivors fix: a departed (elastic-leave) client's stale
+    time estimate must not skew the threshold."""
+    rt = np.asarray(round_times, np.float64)
+    sel = np.asarray(active_mask, bool)
+    if not sel.any():
+        return np.zeros(rt.shape, bool)
+    return sel & (rt > 1.5 * float(np.median(rt[sel])))
+
+
 def adjust_cuts(cuts: Sequence[int], accs: Sequence[float],
                 split: SplitConfig, num_layers: int, *,
                 dead_band: float = 0.002,
-                round_times: Optional[Sequence[float]] = None
+                round_times: Optional[Sequence[float]] = None,
+                active: Optional[Sequence[float]] = None
                 ) -> np.ndarray:
-    """One adjustment step.  Returns the new cut array.
+    """One accuracy-rule adjustment step.  Returns the new cut array.
 
     Accuracy drives direction (paper rule); if round_times are provided,
     a client that is BOTH below-average accuracy and above-deadline slow
-    moves down two buckets (straggler fast path)."""
+    moves down two buckets (straggler fast path).  The slow threshold's
+    median is computed over `active` clients only (all clients when
+    None)."""
     cuts = np.asarray(cuts, int)
     accs = np.asarray(accs, np.float64)
     buckets = np.asarray(split.buckets(num_layers), int)
+    act = (np.ones(len(cuts), bool) if active is None
+           else np.asarray(active, np.float64) > 0)
     avg = accs.mean()
     new = cuts.copy()
     slow = None
     if round_times is not None:
-        rt = np.asarray(round_times, np.float64)
-        slow = rt > 1.5 * np.median(rt)
+        slow = _straggler_mask(round_times, act)
     for i, c in enumerate(cuts):
         pos = int(np.argmin(np.abs(buckets - c)))
         if accs[i] > avg + dead_band:
@@ -57,3 +97,106 @@ def adjust_cuts(cuts: Sequence[int], accs: Sequence[float],
             pos = max(pos - step, 0)
         new[i] = buckets[pos]
     return new
+
+
+def co_adjust(cuts: Sequence[int], rank_cut: Sequence[int],
+              comp_idx: Sequence[int], accs: Sequence[float],
+              split: SplitConfig, num_layers: int, *,
+              rank_buckets: Sequence[int], num_compressors: int,
+              price: Callable,
+              active: Optional[Sequence[float]] = None,
+              dead_band: float = 0.002, min_gain: float = 0.05,
+              round_times: Optional[Sequence[float]] = None
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """One co-controller step over (cut, rank-at-cut, compressor).
+
+    price(cuts, rank_cut, comp_idx) -> (N,) predicted per-client round
+    makespan for a full candidate assignment.  Each client's prediction
+    depends only on its own triple, so the controller prices each
+    candidate triple once for the whole fleet and lets every client read
+    its own column — |offsets| x |rank_buckets| x num_compressors calls,
+    independent of N.
+
+    Returns (cuts', rank_cut', comp_idx', predicted) where `predicted`
+    is each client's predicted makespan under its NEW assignment.
+    Inactive clients keep their triple unchanged (their prediction is
+    the stay-put price).  See the module docstring for the dead-band /
+    min_gain policy."""
+    cuts = np.asarray(cuts, int)
+    rank_cut = np.asarray(rank_cut, int)
+    comp_idx = np.asarray(comp_idx, int)
+    accs = np.asarray(accs, np.float64)
+    n = len(cuts)
+    act = (np.ones(n, bool) if active is None
+           else np.asarray(active, np.float64) > 0)
+    buckets = np.asarray(split.buckets(num_layers), int)
+    rbuckets = np.asarray(sorted({int(r) for r in rank_buckets}), int)
+    if len(rbuckets) == 0:
+        raise ValueError("co_adjust needs at least one rank bucket")
+    if num_compressors < 1:
+        raise ValueError("co_adjust needs at least one compressor bucket")
+    avg = accs[act].mean() if act.any() else accs.mean()
+    slow = (np.zeros(n, bool) if round_times is None
+            else _straggler_mask(round_times, act))
+
+    pos = np.array([int(np.argmin(np.abs(buckets - c))) for c in cuts])
+    rpos = np.array([int(np.argmin(np.abs(rbuckets - r)))
+                     for r in rank_cut])
+
+    offsets = (-2, -1, 0, 1)
+    times = {}
+    for dc in offsets:
+        cand_cuts = buckets[np.clip(pos + dc, 0, len(buckets) - 1)]
+        for ri in range(len(rbuckets)):
+            for ci in range(num_compressors):
+                times[(dc, ri, ci)] = np.asarray(
+                    price(cand_cuts, np.full(n, rbuckets[ri], int),
+                          np.full(n, ci, int)), np.float64)
+
+    new_cuts = cuts.copy()
+    new_rank = rank_cut.copy()
+    new_comp = comp_idx.copy()
+    predicted = np.array([times[(0, rpos[i], comp_idx[i])][i]
+                          for i in range(n)])
+    for i in range(n):
+        if not act[i]:
+            continue
+        t_cur = times[(0, rpos[i], comp_idx[i])][i]
+        if accs[i] < avg - dead_band:
+            # forced quality recovery: never an argmin — shed layers,
+            # raise rank one bucket, weaken compression one step
+            dc = -2 if slow[i] else -1
+            cp = max(pos[i] + dc, 0)
+            ri = min(rpos[i] + 1, len(rbuckets) - 1)
+            ci = max(comp_idx[i] - 1, 0)
+            new_cuts[i] = buckets[cp]
+            new_rank[i] = rbuckets[ri]
+            new_comp[i] = ci
+            predicted[i] = times[(cp - pos[i], ri, ci)][i] \
+                if cp - pos[i] in offsets else t_cur
+            continue
+        dcs = (0, 1) if accs[i] > avg + dead_band else (0,)
+        # score: time first, then prefer staying put, a held cut, higher
+        # rank, weaker compression — the quality-preserving tie-breaks
+        best = None
+        for dc in dcs:
+            if np.clip(pos[i] + dc, 0, len(buckets) - 1) != pos[i] + dc:
+                continue
+            for ri in range(len(rbuckets)):
+                for ci in range(num_compressors):
+                    is_cur = (dc == 0 and ri == rpos[i]
+                              and ci == comp_idx[i])
+                    key = (times[(dc, ri, ci)][i], 0 if is_cur else 1,
+                           abs(dc), -ri, ci)
+                    if best is None or key < best[0]:
+                        best = (key, dc, ri, ci)
+        _, dc, ri, ci = best
+        t_best = times[(dc, ri, ci)][i]
+        if t_best > (1.0 - min_gain) * t_cur:
+            predicted[i] = t_cur
+            continue                     # hysteresis: not worth moving
+        new_cuts[i] = buckets[pos[i] + dc]
+        new_rank[i] = rbuckets[ri]
+        new_comp[i] = ci
+        predicted[i] = t_best
+    return new_cuts, new_rank, new_comp, predicted

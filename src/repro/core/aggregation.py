@@ -40,6 +40,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import lora as lora_lib
 from repro.core.split import client_layer_masks, group_masks
 from repro.models.model import Model
 
@@ -58,13 +59,23 @@ def staleness_discount(staleness, *, power: float = 0.5):
 
 def fedavg(model: Model, client_adapters: Params, cuts, weights,
            active, steps=None, staleness=None,
-           staleness_power: float = 0.5) -> Params:
+           staleness_power: float = 0.5, ranks=None) -> Params:
     """Aggregate: returns the rank-2 (per-layer, no client axis) tree.
 
     steps: optional (N,) effective local-step counts; weights are divided
     by them (step-count normalization, see module docstring).
     staleness: optional (N,) version lags; weights are multiplied by
-    staleness_discount (async/buffered scheduler, see module docstring)."""
+    staleness_discount (async/buffered scheduler, see module docstring).
+    ranks: optional (N, M) per-client effective-rank array (the
+    co-controller's heterogeneous rank assignment).  When given, each
+    rank *column* is averaged only over the clients whose effective rank
+    covers it — a rank-4 client contributes to columns 0-3, a rank-8
+    client to 0-7, each column with its own denominator (the masked-slot
+    generalization of FedAvg).  Columns owned by *no* active client fall
+    back to the plain layer-level average: zeroing them would kill the
+    column permanently (B=0 init means a zeroed A column gets no
+    gradient), so dormant columns coast instead, ready for a future
+    rank increase."""
     masks = client_layer_masks(model.num_flat_layers, cuts)     # (N, M)
     w = (jnp.asarray(weights, jnp.float32)
          * jnp.asarray(active, jnp.float32))
@@ -79,12 +90,26 @@ def fedavg(model: Model, client_adapters: Params, cuts, weights,
         ids = jnp.asarray(g.layer_ids)
         mu = jnp.moveaxis(jnp.take(masks, ids, axis=1), 1, 0) * w  # (Lg,N)
         denom = jnp.maximum(jnp.sum(mu, axis=1), 1e-9)             # (Lg,)
+        if ranks is not None:
+            cmask = lora_lib.rank_masks_for_group(model, g.name,
+                                                  ranks)       # (Lg,N,r)
+            mu_col = mu[..., None] * cmask                     # (Lg,N,r)
+            col_sum = jnp.sum(mu_col, axis=1)                  # (Lg,r)
+            col_denom = jnp.maximum(col_sum, 1e-9)
+            owned = col_sum > 1e-9                             # (Lg,r)
         out[gname] = {}
         for tname, ad in targets.items():
             agg_a = jnp.einsum("ln,ln...->l...", mu, ad["A"]) \
                 / denom[:, None, None]
             agg_b = jnp.einsum("ln,ln...->l...", mu, ad["B"]) \
                 / denom[:, None, None]
+            if ranks is not None:
+                col_a = jnp.einsum("lnr,lndr->ldr", mu_col, ad["A"]) \
+                    / col_denom[:, None, :]
+                col_b = jnp.einsum("lnr,lnrd->lrd", mu_col, ad["B"]) \
+                    / col_denom[:, :, None]
+                agg_a = jnp.where(owned[:, None, :], col_a, agg_a)
+                agg_b = jnp.where(owned[:, :, None], col_b, agg_b)
             out[gname][tname] = {"A": agg_a, "B": agg_b}
     return out
 

@@ -28,7 +28,7 @@ bandwidth- or compute-bound.
 
 from __future__ import annotations
 
-from typing import Dict, Sequence
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
@@ -40,9 +40,16 @@ from repro.models.model import Model
 def round_comm_bytes(model: Model, *, cuts: Sequence[int], batch_size: int,
                      seq_len: int, dtype_bytes: int = 4,
                      compress_ratio: float = 1.0,
-                     smashed_compress: str = "none",
-                     smashed_topk_frac: float = 0.1
+                     smashed_compress="none",
+                     smashed_topk_frac: float = 0.1,
+                     rank_cut: Optional[Sequence[int]] = None
                      ) -> Dict[str, np.ndarray]:
+    """smashed_compress: one compressor name for the whole fleet, or a
+    per-client sequence of names (the co-controller's bucket choices).
+    rank_cut: optional (N,) per-client rank-at-cut override — the
+    adapter-channel bytes then charge each client ITS rank at the cut
+    layer instead of the static LoRAConfig.r_cut, so the controller's
+    rank decision is visible on the wire it optimizes."""
     arch = model.arch
     lora = arch.lora
     m = arch.model
@@ -50,11 +57,18 @@ def round_comm_bytes(model: Model, *, cuts: Sequence[int], batch_size: int,
     n = len(cuts)
 
     dense = float(batch_size * seq_len * m.d_model * dtype_bytes)
-    wire = smashed_lib.wire_bytes(
-        smashed_compress, batch=batch_size, seq=seq_len, d_model=m.d_model,
+    names = ([smashed_compress] * n
+             if isinstance(smashed_compress, str) or smashed_compress is None
+             else list(smashed_compress))
+    if len(names) != n:
+        raise ValueError(f"smashed_compress sequence has {len(names)} "
+                         f"entries for {n} clients")
+    wire = np.array([smashed_lib.wire_bytes(
+        nm, batch=batch_size, seq=seq_len, d_model=m.d_model,
         dtype_bytes=dtype_bytes, topk_frac=smashed_topk_frac)
-    smashed_up = np.full(n, wire, np.float64)
-    smashed_down = np.full(n, wire, np.float64)
+        for nm in names], np.float64)
+    smashed_up = wire.copy()
+    smashed_down = wire.copy()
 
     spec = model.adapter_spec()
     flat_dims = {}
@@ -64,12 +78,15 @@ def round_comm_bytes(model: Model, *, cuts: Sequence[int], batch_size: int,
         for fid in g.layer_ids:
             flat_dims[fid] = per_rank
 
+    rank_cut = None if rank_cut is None else np.asarray(rank_cut, int)
     adapter_up = np.zeros(n, np.float64)
     for i, cut in enumerate(cuts):
         total = 0.0
         for l in range(cut):
             per_rank = flat_dims.get(l, 0)
             r = lora.rank_for_layer(l, cut)
+            if rank_cut is not None and l == cut - 1:
+                r = int(rank_cut[i])
             total += r * per_rank
         adapter_up[i] = total * dtype_bytes * compress_ratio
     adapter_down = adapter_up.copy()
@@ -78,7 +95,7 @@ def round_comm_bytes(model: Model, *, cuts: Sequence[int], batch_size: int,
         "smashed_up": smashed_up,
         "smashed_down": smashed_down,
         "smashed_dense": np.full(n, dense, np.float64),
-        "smashed_ratio": np.full(n, dense / wire, np.float64),
+        "smashed_ratio": dense / wire,
         "adapter_up": adapter_up,
         "adapter_down": adapter_down,
         "total": smashed_up + smashed_down + adapter_up + adapter_down,

@@ -10,6 +10,9 @@ masked rank-r_others LoRA, so:
     reshape;
   * adaptive cut movement (C3) re-ranks layers without changing any array
     shape — no recompilation, ever;
+  * the co-controller's per-client rank-at-cut decision rides the same
+    mask: `effective_ranks(..., r_cut=state["rank_cut"])` takes a traced
+    (N,) rank array, so heterogeneous ranks are data too;
   * communication accounting charges only the *effective* entries (the
     masked entries are identically zero and never shipped).
 
@@ -54,18 +57,26 @@ def init_adapters(model: Model, key, *, num_clients: int = 0,
     return tree
 
 
-def effective_ranks(flat_layers: int, cuts, lora: LoRAConfig):
+def effective_ranks(flat_layers: int, cuts, lora: LoRAConfig, r_cut=None):
     """cuts: ([N,] ) int -> ranks ([N,] M).
 
     Layer m-1 is the client-side cut layer (rank r_cut); with two_side_cut
-    layer m (first server layer) is also reduced (paper Fig 2a)."""
+    layer m (first server layer) is also reduced (paper Fig 2a).
+
+    r_cut: optional per-client rank-at-cut override, ([N,] ) int <=
+    r_others.  This is how the adaptive co-controller (C3) makes rank a
+    per-client decision: the override is a traced array, so any rank
+    assignment runs in the same executable (masked slots, no recompiles).
+    None keeps the static LoRAConfig.r_cut policy."""
     layers = jnp.arange(flat_layers)
     cuts = jnp.asarray(cuts)
     c = cuts[..., None]                                  # ([N,]1)
     is_cut = layers == c - 1
     if lora.two_side_cut:
         is_cut = is_cut | (layers == c)
-    return jnp.where(is_cut, lora.r_cut, lora.r_others)
+    rc = (lora.r_cut if r_cut is None
+          else jnp.asarray(r_cut)[..., None])            # ([N,]1)
+    return jnp.where(is_cut, rc, lora.r_others)
 
 
 def rank_masks_for_group(model: Model, gname: str, ranks):

@@ -90,12 +90,39 @@ def _optimizer_of(arch: ArchConfig):
                           grad_clip=t.grad_clip)
 
 
+def _cut_boundary(smasher, buckets, choice, cuts, residual=None):
+    """Pick the cut-boundary hook: the per-client bucket selector when the
+    co-controller is on (buckets + state["smashed_choice"]), else the
+    single configured compressor (optionally with EF residual)."""
+    if buckets is not None:
+        if choice is None:
+            raise ValueError(
+                "compressor_buckets needs state['smashed_choice'] "
+                "((N,) int32 bucket indices; see prepare_state)")
+        if residual is not None:
+            raise ValueError("smashed error feedback does not compose "
+                             "with per-client compressor buckets")
+        return smashed_lib.make_multi_boundary(buckets, cuts, choice)
+    return smashed_lib.make_boundary(smasher, cuts, residual=residual)
+
+
+def _state_ranks(model: Model, state: Params, cuts):
+    """(N, M) effective-rank array when state carries the co-controller's
+    per-client "rank_cut"; None otherwise (static LoRAConfig policy)."""
+    rank_cut = state.get("rank_cut")
+    if rank_cut is None:
+        return None
+    return lora_lib.effective_ranks(model.num_flat_layers, cuts,
+                                    model.arch.lora, r_cut=rank_cut)
+
+
 def make_train_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
                     remat: str = "none", ce_chunk: int = 0,
                     agg_every: int = 1, compress: str = "none",
                     topk_frac: float = 0.05, microbatch: int = 1,
                     smashed_compress: str = "none",
                     smashed_topk_frac: float = 0.1,
+                    compressor_buckets=None,
                     max_local_steps: int = 1,
                     async_buffer: bool = False, buffer_size: int = 2,
                     staleness_power: float = 0.5,
@@ -119,6 +146,17 @@ def make_train_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
     state carries a "smashed_ef" residual (with_smashed_ef), the topk
     compressor runs with error feedback.
 
+    compressor_buckets (optional, static tuple of compressor names) is
+    the co-controller's search space: state must then carry
+    "smashed_choice" — (N,) int32 indices into the tuple (see
+    prepare_state) — and each client's cut boundary runs its chosen
+    bucket.  Per-client compression becomes data (overrides
+    smashed_compress); incompatible with smashed error feedback.  If
+    state also carries "rank_cut" ((N,) int32), each client's
+    rank-at-cut is likewise read from state: merge/serve/aggregate all
+    use effective_ranks(..., r_cut=state["rank_cut"]), so the
+    co-controller moves cut, rank and compressor without a recompile.
+
     max_local_steps=K > 1 selects the local-steps engine: batch gains a
     leading (K,) step axis, state must carry "step_budgets" (N,) int32
     (with_step_budgets; written by the local_steps scheduler each round),
@@ -141,6 +179,11 @@ def make_train_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
     opt = _optimizer_of(arch)
     smasher = smashed_lib.make_compressor(smashed_compress,
                                           topk_frac=smashed_topk_frac)
+    buckets = None
+    if compressor_buckets is not None:
+        buckets = tuple(
+            smashed_lib.make_compressor(nm, topk_frac=smashed_topk_frac)
+            for nm in compressor_buckets)
     if max_local_steps < 1:
         raise ValueError(f"max_local_steps must be >= 1, got "
                          f"{max_local_steps}")
@@ -165,27 +208,32 @@ def make_train_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
         return _make_async_step(
             model, opt, smasher, policy=policy, remat=remat,
             ce_chunk=ce_chunk, buffer_size=buffer_size,
-            staleness_power=staleness_power, jit=jit)
+            staleness_power=staleness_power, buckets=buckets, jit=jit)
 
     if max_local_steps > 1:
         return _make_local_steps_step(
             model, opt, smasher, policy=policy, remat=remat,
             ce_chunk=ce_chunk, agg_every=agg_every, compress=compress,
-            topk_frac=topk_frac, max_local_steps=max_local_steps, jit=jit)
+            topk_frac=topk_frac, max_local_steps=max_local_steps,
+            buckets=buckets, jit=jit)
 
     def step(base_params, state, batch, weights, active, lr_c, lr_s):
         cad, sad = state["client_adapters"], state["server_adapters"]
         cuts = state["cuts"]
+        rank_cut = state.get("rank_cut")
         sm_ef = state.get("smashed_ef")
         if sm_ef is not None and microbatch > 1:
             raise ValueError("smashed error feedback does not compose "
                              "with microbatch accumulation")
         wl = weights * active
         wl = wl / jnp.maximum(jnp.sum(wl), 1e-9)
-        boundary = smashed_lib.make_boundary(smasher, cuts, residual=sm_ef)
+        boundary = _cut_boundary(smasher, buckets,
+                                 state.get("smashed_choice"), cuts,
+                                 residual=sm_ef)
 
         def loss_fn(cad_, sad_, mb):
-            eff = split.merge_adapters(model, cad_, sad_, cuts)
+            eff = split.merge_adapters(model, cad_, sad_, cuts,
+                                       rank_cut=rank_cut)
             per_loss, metrics = model.loss(
                 base_params, eff, mb, policy=policy, remat=remat,
                 ce_chunk=ce_chunk, per_client=True, boundary=boundary)
@@ -245,7 +293,8 @@ def make_train_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
             model, compress=compress, topk_frac=topk_frac,
             agg_every=agg_every, cad_start=cad, new_cad=new_cad,
             new_sad=new_sad, cuts=cuts, weights=weights, active=active,
-            ef=state.get("ef"), round_idx=state["round"])
+            ef=state.get("ef"), round_idx=state["round"],
+            ranks=_state_ranks(model, state, cuts))
 
         new_state = dict(state)
         new_state.update(client_adapters=new_cad, server_adapters=new_sad,
@@ -265,11 +314,12 @@ def make_train_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
 
 def _round_aggregate(model: Model, *, compress, topk_frac, agg_every,
                      cad_start, new_cad, new_sad, cuts, weights, active,
-                     ef, round_idx, steps=None):
+                     ef, round_idx, steps=None, ranks=None):
     """b1-b3 at the round boundary, shared by both engines: optional
     adapter-delta compression (top-k+EF / int8), survivor- and
-    step-normalized FedAvg, then the b3/b4 broadcast.  Returns
-    (client_adapters', ef')."""
+    step-normalized FedAvg, then the b3/b4 broadcast.  ranks: optional
+    (N, M) per-client effective ranks for heterogeneous-rank column-wise
+    aggregation (aggregation.fedavg).  Returns (client_adapters', ef')."""
 
     def do_agg(operand):
         cad_in, ef_in = operand
@@ -287,7 +337,7 @@ def _round_aggregate(model: Model, *, compress, topk_frac, agg_every,
                                deq, delta)
             cad_for_agg = aggregation.apply_delta(cad_start, deq)
         agg = aggregation.fedavg(model, cad_for_agg, cuts, weights,
-                                 active, steps=steps)
+                                 active, steps=steps, ranks=ranks)
         out = aggregation.broadcast_after_agg(model, cad_for_agg, agg,
                                               new_sad, cuts)
         return out, ef_out
@@ -331,7 +381,8 @@ def _select_any(step_act, new_tree, old_tree):
 
 def _make_local_steps_step(model: Model, opt, smasher, *, policy, remat,
                            ce_chunk, agg_every, compress, topk_frac,
-                           max_local_steps: int, jit: bool):
+                           max_local_steps: int, buckets=None,
+                           jit: bool = True):
     """The K-inner-step engine (see make_train_step docstring).
 
     batch leaves carry a leading (K,) step axis; state carries
@@ -345,6 +396,8 @@ def _make_local_steps_step(model: Model, opt, smasher, *, policy, remat,
     def step(base_params, state, batch, weights, active, lr_c, lr_s):
         cad, sad = state["client_adapters"], state["server_adapters"]
         cuts = state["cuts"]
+        rank_cut = state.get("rank_cut")
+        choice = state.get("smashed_choice")
         budgets = state["step_budgets"]
         sm_ef = state.get("smashed_ef")
         has_ef = sm_ef is not None
@@ -359,11 +412,12 @@ def _make_local_steps_step(model: Model, opt, smasher, *, policy, remat,
             step_act = active * (k < budgets).astype(active.dtype)
             wl = weights * step_act
             wl = wl / jnp.maximum(jnp.sum(wl), 1e-9)
-            boundary = smashed_lib.make_boundary(smasher, cuts,
-                                                 residual=ef_c)
+            boundary = _cut_boundary(smasher, buckets, choice, cuts,
+                                     residual=ef_c)
 
             def loss_fn(cad_, sad_):
-                eff = split.merge_adapters(model, cad_, sad_, cuts)
+                eff = split.merge_adapters(model, cad_, sad_, cuts,
+                                           rank_cut=rank_cut)
                 per_loss, metrics = model.loss(
                     base_params, eff, mb, policy=policy, remat=remat,
                     ce_chunk=ce_chunk, per_client=True, boundary=boundary)
@@ -411,7 +465,7 @@ def _make_local_steps_step(model: Model, opt, smasher, *, policy, remat,
             agg_every=agg_every, cad_start=cad, new_cad=new_cad,
             new_sad=new_sad, cuts=cuts, weights=weights, active=active,
             ef=state.get("ef"), round_idx=state["round"],
-            steps=eff_steps)
+            steps=eff_steps, ranks=_state_ranks(model, state, cuts))
 
         new_state = dict(state)
         new_state.update(client_adapters=new_cad, server_adapters=new_sad,
@@ -434,7 +488,7 @@ def _make_local_steps_step(model: Model, opt, smasher, *, policy, remat,
 
 def _make_async_step(model: Model, opt, smasher, *, policy, remat,
                      ce_chunk, buffer_size: int, staleness_power: float,
-                     jit: bool):
+                     buckets=None, jit: bool = True):
     """One event tick of the buffered-asynchronous engine.
 
     step(base_params, state, batch, weights, active, lr_c, lr_s)
@@ -469,13 +523,17 @@ def _make_async_step(model: Model, opt, smasher, *, policy, remat,
             raise ValueError(
                 f"buffer_size={M} can never fill: only {n} distinct "
                 "clients exist; clamp it to the fleet size")
+        rank_cut = state.get("rank_cut")
         sm_ef = state.get("smashed_ef")
         wl = weights * active
         wl = wl / jnp.maximum(jnp.sum(wl), 1e-9)
-        boundary = smashed_lib.make_boundary(smasher, cuts, residual=sm_ef)
+        boundary = _cut_boundary(smasher, buckets,
+                                 state.get("smashed_choice"), cuts,
+                                 residual=sm_ef)
 
         def loss_fn(cad_, sad_, mb):
-            eff = split.merge_adapters(model, cad_, sad_, cuts)
+            eff = split.merge_adapters(model, cad_, sad_, cuts,
+                                       rank_cut=rank_cut)
             per_loss, metrics = model.loss(
                 base_params, eff, mb, policy=policy, remat=remat,
                 ce_chunk=ce_chunk, per_client=True, boundary=boundary)
@@ -516,7 +574,8 @@ def _make_async_step(model: Model, opt, smasher, *, policy, remat,
             agg = aggregation.fedavg(
                 model, cad_in, cuts, weights, buf_,
                 steps=jnp.maximum(bsteps_, 1.0), staleness=staleness,
-                staleness_power=staleness_power)
+                staleness_power=staleness_power,
+                ranks=_state_ranks(model, state, cuts))
             out = aggregation.broadcast_after_agg(
                 model, cad_in, agg, new_sad, cuts, recv_mask=buf_)
             new_gver = gver_ + 1
@@ -563,7 +622,8 @@ def make_eval_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
     def step(base_params, state, batch, weights):
         eff = split.serve_adapters(model, state["client_adapters"],
                                    state["server_adapters"], state["cuts"],
-                                   weights)
+                                   weights,
+                                   rank_cut=state.get("rank_cut"))
         per_loss, metrics = model.loss(base_params, eff, batch,
                                        policy=policy, ce_chunk=ce_chunk,
                                        per_client=True)
@@ -619,13 +679,39 @@ def with_per_client_opt_steps(state: Params) -> Params:
     return state
 
 
+def with_rank_cut(state: Params, r_cut: int) -> Params:
+    """Attach the co-controller's per-client rank-at-cut array ((N,)
+    int32, initialized to the static policy's r_cut).  Once present, the
+    engines read rank from state instead of LoRAConfig — rank becomes
+    per-client data, moved by C3 without recompiles."""
+    state = dict(state)
+    n = state["cuts"].shape[0]
+    state["rank_cut"] = jnp.full((n,), int(r_cut), jnp.int32)
+    return state
+
+
+def with_smashed_choice(state: Params, index: int = 0) -> Params:
+    """Attach the co-controller's per-client compressor-bucket index
+    ((N,) int32 into make_train_step's compressor_buckets tuple)."""
+    state = dict(state)
+    n = state["cuts"].shape[0]
+    state["smashed_choice"] = jnp.full((n,), int(index), jnp.int32)
+    return state
+
+
 def prepare_state(state: Params, *, max_local_steps: int = 1,
-                  async_buffer: bool = False) -> Params:
+                  async_buffer: bool = False, rank_cut=None,
+                  smashed_choice=None) -> Params:
     """Attach every scheduler-conditional state leaf in one place —
     the single source of truth for the engine's state template, shared
     by SplitFTSystem and the cell builders so the two paths can never
     drift (a mismatch only surfaces later as a restore()/eval_shape
-    template error)."""
+    template error).
+
+    rank_cut / smashed_choice: initial per-client rank-at-cut and
+    compressor-bucket index for the adaptive co-controller (None leaves
+    the static policy in force — the pre-controller template,
+    bit-exact)."""
     if max_local_steps > 1:
         state = with_step_budgets(state)
     if async_buffer:
@@ -634,6 +720,10 @@ def prepare_state(state: Params, *, max_local_steps: int = 1,
         # clients take unequal step counts inside a round: Adam's bias
         # correction must track each client's own count
         state = with_per_client_opt_steps(state)
+    if rank_cut is not None:
+        state = with_rank_cut(state, rank_cut)
+    if smashed_choice is not None:
+        state = with_smashed_choice(state, smashed_choice)
     return state
 
 

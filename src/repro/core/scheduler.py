@@ -45,6 +45,14 @@ only a step's final phase contributes an engine tick.  Training numerics
 are unchanged in every mode — overlap reshapes only the simulated clock
 (and with it the event ORDER under heterogeneity).
 
+Schedulers compose with the C3 controllers (repro.core.adaptive): the
+round epilogue may move each client's cut — and, under the
+co-controller, its rank-at-cut and smashed compressor — which changes
+the client's phase durations.  Barrier schedulers see the new durations
+at the next plan(); the async loop re-draws them at the client's next
+scheduled phase (SplitFTSystem's phase cache is keyed by the full
+policy assignment, so a moved triple is re-priced, not stale).
+
 The barrier schedulers are small, stateless policy objects; everything
 they decide is arrays in a `RoundPlan`, so the engine below them never
 recompiles when the policy changes its mind.  The async scheduler

@@ -209,3 +209,42 @@ def make_boundary(compressor: Optional[SmashedCompressor], cuts,
     ef_boundary.stateful = True
     ef_boundary.init = lambda: jnp.zeros_like(residual)
     return ef_boundary
+
+
+def make_multi_boundary(compressors, cuts, choice):
+    """Boundary hook with a *per-client compressor choice* — the
+    co-controller's third knob.
+
+    compressors: static tuple of Optional[SmashedCompressor], one per
+    bucket ("none" -> None).  choice: (N,) int32 index into that tuple,
+    carried in round state (state["smashed_choice"]) — a traced array, so
+    which compressor each client runs is data, like its cut and rank.
+    Every bucket output is computed inside the cut-layer cond and the
+    per-client result selected by `where`; with <=4 buckets and the cond
+    skipping the M-1 non-cut layers this costs one extra elementwise pass
+    per active bucket.  Each bucket stays STE-wrapped, so f4 remains
+    symmetric per client.  Error feedback is not supported here — the EF
+    residual is sized for one compressor's remainder semantics (see
+    make_boundary); the system layer rejects smashed_ef with bucket
+    search."""
+    if all(c is None for c in compressors):
+        return None
+    cut_ids = jnp.asarray(cuts) - 1
+    idx = jnp.asarray(choice)
+
+    def boundary(x, fid):
+        sel = (cut_ids == fid)
+
+        def comp(op):
+            out = op
+            for k, c in enumerate(compressors):
+                if c is None:
+                    continue
+                m = (sel & (idx == k)).reshape(
+                    (-1,) + (1,) * (op.ndim - 1))
+                out = jnp.where(m, c.apply(op), out)
+            return out
+
+        return jax.lax.cond(jnp.any(sel), comp, lambda op: op, x)
+
+    return boundary

@@ -47,17 +47,21 @@ def group_masks(model: Model, masks):
 
 
 def merge_adapters(model: Model, client_adapters: Params,
-                   server_adapters: Params, cuts) -> Params:
+                   server_adapters: Params, cuts,
+                   rank_cut=None) -> Params:
     """Build the apply-ready effective adapter tree for a SplitFT step.
 
     client_adapters: rank-max tree with client axis (Lg, N, din, r).
     server_adapters: rank-max tree without client axis (Lg, din, r).
     Output leaves carry the client axis and are rank-masked + scaled with
-    the per-client rank policy."""
+    the per-client rank policy.  rank_cut: optional (N,) per-client
+    rank-at-cut override (the co-controller's rank bucket assignment,
+    state["rank_cut"]); None keeps the static LoRAConfig.r_cut."""
     masks = client_layer_masks(model.num_flat_layers, cuts)    # (N, M)
     gmasks = group_masks(model, masks)
     ranks = lora_lib.effective_ranks(model.num_flat_layers, cuts,
-                                     model.arch.lora)          # (N, M)
+                                     model.arch.lora,
+                                     r_cut=rank_cut)           # (N, M)
 
     merged: Params = {}
     for gname, targets in client_adapters.items():
@@ -73,18 +77,21 @@ def merge_adapters(model: Model, client_adapters: Params,
 
 
 def serve_adapters(model: Model, client_adapters: Params,
-                   server_adapters: Params, cuts, weights) -> Params:
+                   server_adapters: Params, cuts, weights,
+                   rank_cut=None) -> Params:
     """Global-model adapters for evaluation/serving (paper b4).
 
     Per flat layer: the FedAvg-weighted mix of the client copies (for
     clients that own the layer) and the server copy (for the rest).  With
     homogeneous cuts this reduces exactly to the paper's global model
-    (client layers from the aggregate, server layers from the server)."""
+    (client layers from the aggregate, server layers from the server).
+    rank_cut: optional (N,) per-client rank-at-cut (see merge_adapters)."""
     masks = client_layer_masks(model.num_flat_layers, cuts)    # (N, M)
     w = jnp.asarray(weights, jnp.float32)
     w = w / jnp.maximum(jnp.sum(w), 1e-9)
     ranks = lora_lib.effective_ranks(model.num_flat_layers, cuts,
-                                     model.arch.lora)          # (N, M)
+                                     model.arch.lora,
+                                     r_cut=rank_cut)           # (N, M)
     # weighted mean rank per layer -> serving scale stays consistent
     mean_ranks = jnp.sum(w[:, None] * ranks, axis=0)           # (M,)
 

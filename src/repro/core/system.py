@@ -15,6 +15,18 @@ The round loop itself is split engine/policy:
     wall-clock accounting (`sim_time` / cumulative `sim_clock` in the
     round records) that the benchmarks compare.
 
+C3 is likewise split engine/policy.  The round epilogue (`_adjust_c3`)
+runs one of two host-side controllers: `accuracy` (the paper's rule —
+cuts follow per-client accuracy alone) or `co` (adaptive.co_adjust —
+per client, the (cut bucket, rank-at-cut bucket, smashed compressor)
+triple minimizing the PREDICTED round makespan, priced through
+`predict_round_times`, under an accuracy dead-band).  Whatever the
+controller decides is written into round state as plain int32 arrays
+("cuts", "rank_cut", "smashed_choice"): policy is data, so a moved
+triple re-masks the next engine call instead of recompiling it, and
+prediction reuses the exact comm/speed code the simulated clock
+charges (jitter aside), keeping predicted == simulated testable.
+
 The host loop has two shapes.  The barrier schedulers run one plan ->
 one engine call -> one record per round (`_run_barrier`).  The async
 scheduler replaces the barrier with an event-queue loop (`_run_async`):
@@ -50,7 +62,7 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.config import ArchConfig
-from repro.core import adaptive, comm, rounds
+from repro.core import adaptive, comm, rounds, smashed
 from repro.core import scheduler as scheduler_lib
 from repro.core.scheduler import RoundPlan
 from repro.core.split import serve_adapters
@@ -106,6 +118,17 @@ class SystemConfig:
     checkpoint_every: int = 0
     keep_checkpoints: int = 3
     adaptive: Optional[bool] = None   # None -> arch.split.adaptive
+    controller: Optional[str] = None  # C3 controller: accuracy | co;
+                                      # None -> arch.split.controller
+    rank_buckets: Optional[tuple] = None        # co: rank-at-cut search
+                                                # set; None -> arch.split
+                                                # (then (lora.r_cut,))
+    compressor_buckets: Optional[tuple] = None  # co: compressor search
+                                                # set; None -> arch.split
+                                                # (then the configured
+                                                # smashed_compress)
+    acc_dead_band: Optional[float] = None  # None -> arch.split
+    min_gain: Optional[float] = None       # None -> arch.split
 
 
 class SplitFTSystem:
@@ -162,6 +185,12 @@ class SplitFTSystem:
         self.overlap_comm = (arch.split.overlap_comm
                              if self.sys.overlap_comm is None
                              else self.sys.overlap_comm)
+        self.controller = (arch.split.controller
+                           if self.sys.controller is None
+                           else self.sys.controller)
+        if self.controller not in ("accuracy", "co"):
+            raise ValueError(f"unknown C3 controller "
+                             f"{self.controller!r}; known: accuracy, co")
         self.scheduler = scheduler_lib.make_scheduler(
             sched_name, deadline_frac=dl_frac, max_local_steps=k_cap,
             buffer_size=buf, staleness_power=spow,
@@ -170,9 +199,12 @@ class SplitFTSystem:
                     for k in ("speed_sigma", "bw_sigma", "jitter_sigma",
                               "bw_mean", "server_flops_per_s")
                     if getattr(self.sys, k) is not None}
+        # the co-controller prices candidates with SpeedModel.phase_times,
+        # so it always carries a speed model
         self.speed = (SpeedModel(n, seed=seed, **speed_kw)
                       if (self.sys.straggler_sim
-                          or self.scheduler.needs_speed) else None)
+                          or self.scheduler.needs_speed
+                          or self.controller == "co") else None)
         self.sim_clock = 0.0           # cumulative simulated seconds
 
         # ---- model/state (engine) ----
@@ -198,16 +230,59 @@ class SplitFTSystem:
                 "memoryless round-trips with no residual to feed back")
         if use_smashed_ef:
             self.state = rounds.with_smashed_ef(self.state, self.model)
+
+        # ---- co-controller search space (cut x rank x compressor) ----
+        self.acc_dead_band = (arch.split.acc_dead_band
+                              if self.sys.acc_dead_band is None
+                              else self.sys.acc_dead_band)
+        self.min_gain = (arch.split.min_gain if self.sys.min_gain is None
+                         else self.sys.min_gain)
+        rb = (self.sys.rank_buckets if self.sys.rank_buckets is not None
+              else arch.split.rank_buckets) or (arch.lora.r_cut,)
+        self.rank_buckets = tuple(sorted({int(r) for r in rb}))
+        if any(r < 1 or r > arch.lora.r_others for r in self.rank_buckets):
+            raise ValueError(
+                f"rank_buckets {self.rank_buckets} must lie in "
+                f"[1, r_others={arch.lora.r_others}] (adapters are "
+                "allocated at r_others; ranks are masks, not shapes)")
+        cbk = (self.sys.compressor_buckets
+               if self.sys.compressor_buckets is not None
+               else arch.split.compressor_buckets) \
+            or (self.smashed_compress,)
+        # bucket index order == aggressiveness order: weakest compression
+        # (most wire bytes) first, so "one step weaker" is index - 1
+        self.comp_buckets = tuple(sorted(
+            dict.fromkeys(cbk),
+            key=lambda nm: -smashed.wire_bytes(
+                nm, batch=arch.train.batch_size, seq=arch.train.seq_len,
+                d_model=arch.model.d_model,
+                topk_frac=self.smashed_topk_frac)))
+
         is_async = self.scheduler.name == "async"
+        co = self.controller == "co"
+        if co and use_smashed_ef:
+            raise ValueError(
+                "the co-controller's per-client compressor choice does "
+                "not compose with smashed error feedback (the EF "
+                "residual is sized for one compressor's remainder "
+                "semantics); set smashed_ef=False")
+        init_rank = int(self.rank_buckets[int(np.argmin(np.abs(
+            np.asarray(self.rank_buckets) - arch.lora.r_cut)))])
+        init_choice = (self.comp_buckets.index(self.smashed_compress)
+                       if self.smashed_compress in self.comp_buckets
+                       else 0)
         self.state = rounds.prepare_state(
             self.state, max_local_steps=self.scheduler.max_steps,
-            async_buffer=is_async)
+            async_buffer=is_async,
+            rank_cut=init_rank if co else None,
+            smashed_choice=init_choice if co else None)
         self.train_step = rounds.make_train_step(
             self.model, policy=policy, remat=arch.train.remat,
             agg_every=self.sys.agg_every, compress=self.sys.compress,
             topk_frac=self.sys.topk_frac,
             smashed_compress=self.smashed_compress,
             smashed_topk_frac=self.smashed_topk_frac,
+            compressor_buckets=self.comp_buckets if co else None,
             max_local_steps=self.scheduler.max_steps,
             async_buffer=is_async, buffer_size=buf,
             staleness_power=spow, jit=jit)
@@ -253,38 +328,82 @@ class SplitFTSystem:
     # ------------------------------------------------------------------
     # round-loop pieces (one jitted step + host-side policy around it)
 
-    def _round_comm(self, cuts_np: np.ndarray) -> Dict[str, np.ndarray]:
-        """Per-client comm bytes for the current cuts — computed ONCE per
-        round, shared by the straggler model and the round record."""
+    def _state_policy(self):
+        """The co-controller's per-client (rank_cut, smashed_choice)
+        arrays from round state, (None, None) under the static policy."""
+        rank = self.state.get("rank_cut")
+        choice = self.state.get("smashed_choice")
+        return (None if rank is None else np.asarray(rank),
+                None if choice is None else np.asarray(choice))
+
+    def _round_comm(self, cuts_np: np.ndarray, rank_np=None,
+                    choice_np=None) -> Dict[str, np.ndarray]:
+        """Per-client comm bytes for a (cut, rank, compressor)
+        assignment — computed ONCE per round for the current state (and
+        once per candidate triple when the co-controller prices moves),
+        shared by the straggler model and the round record."""
         arch = self.arch
+        names = (self.smashed_compress if choice_np is None
+                 else [self.comp_buckets[int(k)] for k in choice_np])
         return comm.round_comm_bytes(
             self.model, cuts=cuts_np,
             batch_size=arch.train.batch_size,
             seq_len=arch.train.seq_len,
-            smashed_compress=self.smashed_compress,
-            smashed_topk_frac=self.smashed_topk_frac)
+            smashed_compress=names,
+            smashed_topk_frac=self.smashed_topk_frac,
+            rank_cut=rank_np)
+
+    @property
+    def _flops_layer(self) -> float:
+        arch = self.arch
+        return 12 * arch.model.d_model ** 2 \
+            * arch.train.batch_size * arch.train.seq_len
 
     def _round_phases(self, r: int, cuts_np: np.ndarray,
-                      cb: Dict[str, np.ndarray]) -> Optional[np.ndarray]:
+                      cb: Dict[str, np.ndarray], *,
+                      jitter: bool = True) -> Optional[np.ndarray]:
         """(5, N) per-phase durations of one local step (or None without
         a speed model): comm.py's per-channel byte split maps straight
-        onto the wire phases (smashed -> f2/f4, adapter -> sync)."""
+        onto the wire phases (smashed -> f2/f4, adapter -> sync).
+        jitter=False gives the EXPECTED durations — the co-controller's
+        pricing view of the exact same clock."""
         if self.speed is None:
             return None
-        arch = self.arch
-        flops_layer = 12 * arch.model.d_model ** 2 \
-            * arch.train.batch_size * arch.train.seq_len
         return self.speed.phase_times(
-            cuts=cuts_np, flops_per_layer=flops_layer,
-            smashed_bytes=float(cb["smashed_up"][0]),
-            smashed_down_bytes=float(cb["smashed_down"][0]),
+            cuts=cuts_np, flops_per_layer=self._flops_layer,
+            smashed_bytes=cb["smashed_up"],
+            smashed_down_bytes=cb["smashed_down"],
             adapter_bytes=cb["adapter_up"], round_idx=r,
-            server_layers=self.model.num_flat_layers - cuts_np)
+            server_layers=self.model.num_flat_layers - cuts_np,
+            jitter=jitter)
+
+    def predict_round_times(self, r: int, cuts, rank_cut=None,
+                            comp_idx=None) -> np.ndarray:
+        """(N,) predicted per-client one-step round time for a candidate
+        (cut, rank-at-cut, compressor-index) assignment — the
+        co-controller's objective.  Delegates to the SAME
+        comm.round_comm_bytes + SpeedModel.phase_times the simulated
+        clock charges, minus the jitter draw, so with jitter_sigma == 0
+        prediction and simulation coincide exactly.  Serial phase sum;
+        under overlap_comm, the steady-state per-step time of the
+        double-buffered pipeline (makespan of K steps / K)."""
+        cuts_np = np.asarray(cuts, int)
+        cb = self._round_comm(
+            cuts_np,
+            None if rank_cut is None else np.asarray(rank_cut, int),
+            None if comp_idx is None else np.asarray(comp_idx, int))
+        phases = self._round_phases(r, cuts_np, cb, jitter=False)
+        if self.overlap_comm:
+            k = max(2, self.scheduler.max_steps)
+            steps = np.full(cuts_np.shape[0], k, np.int64)
+            return straggler.pipelined_makespan(phases, steps) / k
+        return straggler.serial_step_times(phases)
 
     def _plan_round(self, r: int):
         """One scheduler decision: (RoundPlan, comm-bytes dict)."""
         cuts_np = np.asarray(self.state["cuts"])
-        cb = self._round_comm(cuts_np)
+        rank_np, choice_np = self._state_policy()
+        cb = self._round_comm(cuts_np, rank_np, choice_np)
         phases = self._round_phases(r, cuts_np, cb)
         times = (None if phases is None
                  else straggler.serial_step_times(phases))
@@ -308,6 +427,11 @@ class SplitFTSystem:
             "cuts": np.asarray(self.state["cuts"]).copy(),
             "active": plan.active.copy(),
         }
+        if "rank_cut" in self.state:
+            rec["rank_cut"] = np.asarray(self.state["rank_cut"]).copy()
+        if "smashed_choice" in self.state:
+            rec["smashed_choice"] = np.asarray(
+                self.state["smashed_choice"]).copy()
         if plan.times is not None:
             rec["round_time_sim"] = plan.times
             rec["sim_time"] = plan.sim_time
@@ -338,7 +462,10 @@ class SplitFTSystem:
 
     def _adjust_c3(self, r: int, rec: Dict[str, Any], weights,
                    times: Optional[np.ndarray]):
-        """C3: evaluate the global model per client, adjust cuts/weights."""
+        """C3: evaluate the global model per client, then adjust the
+        allocation — cuts only (paper accuracy rule) or the full (cut,
+        rank-at-cut, compressor) triple via the predicted-makespan
+        co-controller (adaptive.co_adjust)."""
         e_loss, e_metrics = self.eval_step(
             self.base_params, self.state, self._eval_batch(r), weights)
         accs = np.asarray(e_metrics["accuracy"])
@@ -346,10 +473,29 @@ class SplitFTSystem:
         rec["eval_accuracy"] = accs
         self.c3_weights = adaptive.update_weights(
             accs, self.arch.split.gamma)
-        new_cuts = adaptive.adjust_cuts(
-            np.asarray(self.state["cuts"]), accs, self.arch.split,
-            self.model.num_flat_layers, round_times=times)
-        self.state["cuts"] = jnp.asarray(new_cuts, jnp.int32)
+        active = self.pool.active.astype(np.float64)
+        if self.controller == "co":
+            rank_np, choice_np = self._state_policy()
+            new_cuts, new_rank, new_comp, pred = adaptive.co_adjust(
+                np.asarray(self.state["cuts"]), rank_np, choice_np,
+                accs, self.arch.split, self.model.num_flat_layers,
+                rank_buckets=self.rank_buckets,
+                num_compressors=len(self.comp_buckets),
+                price=lambda c, rk, ci: self.predict_round_times(
+                    r + 1, c, rk, ci),
+                active=active, dead_band=self.acc_dead_band,
+                min_gain=self.min_gain, round_times=times)
+            self.state["cuts"] = jnp.asarray(new_cuts, jnp.int32)
+            self.state["rank_cut"] = jnp.asarray(new_rank, jnp.int32)
+            self.state["smashed_choice"] = jnp.asarray(new_comp,
+                                                       jnp.int32)
+            rec["predicted_time"] = pred
+        else:
+            new_cuts = adaptive.adjust_cuts(
+                np.asarray(self.state["cuts"]), accs, self.arch.split,
+                self.model.num_flat_layers, round_times=times,
+                active=active)
+            self.state["cuts"] = jnp.asarray(new_cuts, jnp.int32)
         rec["weights"] = self.c3_weights.copy()
 
     def _finish_round(self, r: int, rec: Dict[str, Any], log_every: int,
@@ -414,17 +560,25 @@ class SplitFTSystem:
         """_round_comm memo for the event loop: cuts change only in the
         per-aggregation C3 epilogue, but ticks fire many times per
         round."""
-        key = cuts_np.tobytes()
+        rank_np, choice_np = self._state_policy()
+        key = (cuts_np.tobytes(),
+               None if rank_np is None else rank_np.tobytes(),
+               None if choice_np is None else choice_np.tobytes())
         if self._comm_cache is None or self._comm_cache[0] != key:
-            self._comm_cache = (key, self._round_comm(cuts_np))
+            self._comm_cache = (key, self._round_comm(cuts_np, rank_np,
+                                                      choice_np))
         return self._comm_cache[1]
 
     def _cached_phases(self, round_idx: int, cuts_np: np.ndarray,
                        cb: Dict[str, np.ndarray]) -> np.ndarray:
-        """_round_phases memo keyed by (launch index, cuts): relaunching
-        clients at the same launch share one full-fleet draw instead of
-        re-drawing the whole lognormal vector per client."""
-        key = (round_idx, cuts_np.tobytes())
+        """_round_phases memo keyed by (launch index, cuts + controller
+        policy): relaunching clients at the same launch share one
+        full-fleet draw instead of re-drawing the whole lognormal vector
+        per client."""
+        rank_np, choice_np = self._state_policy()
+        key = (round_idx, cuts_np.tobytes(),
+               None if rank_np is None else rank_np.tobytes(),
+               None if choice_np is None else choice_np.tobytes())
         p = self._times_cache.get(key)
         if p is None:
             if len(self._times_cache) > 64:   # launches only grow; old
@@ -767,5 +921,6 @@ class SplitFTSystem:
         weights = jnp.asarray(self.combined_weights(), jnp.float32)
         eff = serve_adapters(self.model, self.state["client_adapters"],
                              self.state["server_adapters"],
-                             self.state["cuts"], weights)
+                             self.state["cuts"], weights,
+                             rank_cut=self.state.get("rank_cut"))
         return self.base_params, eff

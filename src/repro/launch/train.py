@@ -6,6 +6,10 @@
 Runs the paper's workflow on whatever devices are available (CPU for the
 paper-scale models; a TPU mesh transparently via --mesh).  Artifacts:
 history JSONL + checkpoints under --out.
+
+The adaptive co-controller (docs/ARCHITECTURE.md) is reached with
+  --controller co --rank-buckets 2,4,8 \
+      --compressor-buckets none,int8,topk --straggler-sim
 """
 
 from __future__ import annotations
@@ -19,7 +23,18 @@ import sys
 import numpy as np
 
 
-def main(argv=None):
+def _int_list(s: str):
+    return tuple(int(x) for x in s.split(",") if x)
+
+
+def _str_list(s: str):
+    return tuple(x.strip() for x in s.split(",") if x.strip())
+
+
+def build_parser() -> argparse.ArgumentParser:
+    """The CLI surface, exposed at module level so tooling (the docs-
+    freshness test) can verify every flag the docs mention actually
+    parses."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt2-small")
     ap.add_argument("--rounds", type=int, default=100)
@@ -67,11 +82,39 @@ def main(argv=None):
                          "config's choice")
     ap.add_argument("--no-overlap-comm", dest="overlap_comm",
                     action="store_false")
+    ap.add_argument("--controller", default=None,
+                    choices=[None, "accuracy", "co"],
+                    help="C3 controller: 'accuracy' = the paper's "
+                         "accuracy-only cut rule; 'co' = the phase-time "
+                         "co-controller picking each client's (cut, "
+                         "rank-at-cut, compressor) triple by predicted "
+                         "pipelined makespan under an accuracy "
+                         "dead-band; default: the arch config's choice")
+    ap.add_argument("--rank-buckets", type=_int_list, default=None,
+                    metavar="R1,R2,...",
+                    help="--controller co: rank-at-cut search set "
+                         "(each <= r_others; ranks are masks, so any "
+                         "assignment shares one executable)")
+    ap.add_argument("--compressor-buckets", type=_str_list, default=None,
+                    metavar="C1,C2,...",
+                    help="--controller co: smashed-compressor search "
+                         "set (subset of none,int8,fp8,topk)")
+    ap.add_argument("--acc-dead-band", type=float, default=None,
+                    help="accuracy dead-band half-width gating "
+                         "co-controller moves")
+    ap.add_argument("--min-gain", type=float, default=None,
+                    help="--controller co: relative predicted-makespan "
+                         "improvement required before moving a "
+                         "client's triple (hysteresis)")
     ap.add_argument("--straggler-sim", action="store_true")
     ap.add_argument("--samples", type=int, default=2000)
     ap.add_argument("--out", default="runs/train")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     from repro.config import reduced as reduced_cfg
     from repro.configs import get_config
@@ -112,6 +155,11 @@ def main(argv=None):
         buffer_size=args.buffer_size,
         staleness_power=args.staleness_power,
         overlap_comm=args.overlap_comm,
+        controller=args.controller,
+        rank_buckets=args.rank_buckets,
+        compressor_buckets=args.compressor_buckets,
+        acc_dead_band=args.acc_dead_band,
+        min_gain=args.min_gain,
         straggler_sim=args.straggler_sim,
         checkpoint_dir=os.path.join(args.out, "ckpt"),
         checkpoint_every=max(args.rounds // 5, 1))

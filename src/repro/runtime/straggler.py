@@ -66,11 +66,11 @@ class SpeedModel:
             rng.normal(0.0, self.bw_sigma, self.num_clients))
 
     def phase_times(self, *, cuts: Sequence[int], flops_per_layer: float,
-                    smashed_bytes: float, adapter_bytes: Sequence[float],
+                    smashed_bytes, adapter_bytes: Sequence[float],
                     round_idx: int = 0, ref_flops_per_s: float = 5e12,
                     server_layers: Optional[Sequence[int]] = None,
-                    smashed_down_bytes: Optional[float] = None
-                    ) -> np.ndarray:
+                    smashed_down_bytes=None,
+                    jitter: bool = True) -> np.ndarray:
         """(5, N) per-client phase durations for one local step.
 
         Rows follow `PHASES`: client compute (cut_i layers of
@@ -81,22 +81,34 @@ class SpeedModel:
         current compressor is symmetric), and the b1/b3 adapter sync.
         The per-round jitter draw scales every phase, so the serial
         column sum preserves the legacy single-duration clock's
-        semantics."""
-        rng = np.random.RandomState(round_idx * 7919 + self.seed)
-        jitter = np.exp(rng.normal(0.0, self.jitter_sigma,
-                                   self.num_clients))
+        semantics.
+
+        smashed_bytes / smashed_down_bytes may be scalars or (N,) arrays
+        (per-client compressor choices produce per-client payloads).
+        jitter=False disables the per-round noise draw — the EXPECTED
+        phase times the adaptive co-controller prices candidate (cut,
+        rank, compressor) assignments with; with jitter_sigma == 0 the
+        jittered and unjittered clocks coincide exactly, which is what
+        makes predicted-vs-simulated makespan testable."""
+        if jitter:
+            rng = np.random.RandomState(round_idx * 7919 + self.seed)
+            jit = np.exp(rng.normal(0.0, self.jitter_sigma,
+                                    self.num_clients))
+        else:
+            jit = np.ones(self.num_clients)
         cuts = np.asarray(cuts, np.float64)
         client = cuts * flops_per_layer * 3.0 / \
-            (ref_flops_per_s * self.speed) * jitter
-        down = (smashed_bytes if smashed_down_bytes is None
-                else smashed_down_bytes)
-        f2 = smashed_bytes / self.bandwidth * jitter
-        f4 = down / self.bandwidth * jitter
+            (ref_flops_per_s * self.speed) * jit
+        up = np.asarray(smashed_bytes, np.float64)
+        down = (up if smashed_down_bytes is None
+                else np.asarray(smashed_down_bytes, np.float64))
+        f2 = up / self.bandwidth * jit
+        f4 = down / self.bandwidth * jit
         adapter = np.asarray(adapter_bytes, np.float64) \
-            / self.bandwidth * jitter
+            / self.bandwidth * jit
         if self.server_flops_per_s > 0 and server_layers is not None:
             server = np.asarray(server_layers, np.float64) \
-                * flops_per_layer * 3.0 / self.server_flops_per_s * jitter
+                * flops_per_layer * 3.0 / self.server_flops_per_s * jit
         else:
             server = np.zeros(self.num_clients, np.float64)
         return np.stack([client, f2, server, f4, adapter])
