@@ -1,0 +1,125 @@
+"""Fleet-scale cohort engine (ISSUE 7): population sweep + two-tier
+aggregation.
+
+Two claims, two lanes:
+
+  * `fleet_pop_{P}` — rounds/sec at population P with the cohort size C
+    fixed.  The cohort engine gathers C slots into the ONE traced
+    executable and scatters them back, so per-round cost is O(C) work
+    plus O(C) gather/scatter — flat in P (the PopulationStore is a
+    sparse pid -> slot map, never O(P)).  Acceptance: rounds/sec at
+    P = 10^5 within ~10% of P = 10^2.  `derived` is rounds/sec; each
+    row also carries the simulated seconds to reach the smallest
+    population's final loss (`time_to_target`, -1.0 = never, kept
+    finite so results/bench.json stays strict JSON).
+  * `fleet_flat_server_time` / `fleet_hier_server_time` — the charged
+    adapter-sync + server-ingest phase seconds (phase row 4 of the
+    round record's `phase_times`) under a finite server ingest link,
+    flat vs >= 4 edge groups.  Edges pre-reduce their clients' adapters,
+    so the server ingests E adapters instead of C per round:
+    hierarchical must be strictly cheaper.  `derived` is the charged
+    seconds (lower = better); the hier row adds `speedup_vs_flat`.
+
+Population mode's numbers are comparable across P because the engine,
+cohort size, and per-pid speed draws are all population-independent;
+only WHICH pids train each round changes.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import DRYRUN, EVAL_SAMPLES, SAMPLES, bench_arch
+from repro.core.system import SplitFTSystem, SystemConfig
+
+POPULATIONS = (100, 1_000, 10_000, 100_000)
+ROUNDS = 2 if DRYRUN else 12
+WARMUP = 1                     # first round pays compilation; exclude it
+
+# a server fan-in slow enough that adapter ingest dominates phase 4, so
+# the flat-vs-hierarchical comparison measures the hop the edges remove
+INGEST_KW = dict(straggler_sim=True, scheduler="sync",
+                 server_ingest_bw=1e6, speed_sigma=0.0, bw_sigma=0.0,
+                 jitter_sigma=0.0)
+EDGE_GROUPS = 4
+
+
+def _sys_cfg(**kw) -> SystemConfig:
+    return SystemConfig(num_samples=SAMPLES, eval_samples=EVAL_SAMPLES,
+                        **kw)
+
+
+def _pop_lane(population: int):
+    arch = bench_arch("gpt2-small")
+    system = SplitFTSystem(arch, _sys_cfg(population=population,
+                                          straggler_sim=True), seed=0)
+    system.run(WARMUP, log_every=0)
+    t0 = time.time()
+    hist = system.run(ROUNDS, log_every=0)
+    wall = time.time() - t0
+    loss = np.array([h["loss"] for h in hist[-ROUNDS:]])
+    clock = np.array([h["sim_clock"] for h in hist[-ROUNDS:]])
+    return {
+        "population": population,
+        "cohort": arch.data.num_clients,
+        "rounds_per_sec": ROUNDS / max(wall, 1e-9),
+        "us_per_round": wall / ROUNDS * 1e6,
+        "loss": loss,
+        "sim_clock": clock,
+        "slots": len(system.store),
+    }
+
+
+def _server_phase_seconds(edge_groups: int) -> float:
+    arch = bench_arch("gpt2-small")
+    kw = dict(INGEST_KW)
+    if edge_groups > 1:
+        kw["edge_groups"] = edge_groups
+    system = SplitFTSystem(arch, _sys_cfg(population=100, **kw), seed=0)
+    hist = system.run(ROUNDS, log_every=0)
+    # phase row 4 = adapter sync + server ingest; sum over the cohort,
+    # mean over rounds
+    return float(np.mean([h["phase_times"][4].sum() for h in hist]))
+
+
+def run() -> List[dict]:
+    rows: List[dict] = []
+
+    lanes = [_pop_lane(p) for p in POPULATIONS]
+    # time-to-target: the smallest population's final loss, measured on
+    # every lane's simulated clock
+    target = float(lanes[0]["loss"][-1])
+    for lane in lanes:
+        hit = np.where(lane["loss"] <= target)[0]
+        t = (float(lane["sim_clock"][int(hit[0])]) if hit.size else -1.0)
+        rows.append({
+            "name": f"fleet_pop_{lane['population']}",
+            "us_per_call": lane["us_per_round"],
+            "derived": lane["rounds_per_sec"],
+            "population": lane["population"],
+            "cohort": lane["cohort"],
+            "time_to_target": t,
+            "target_loss": target,
+            "final_loss": float(lane["loss"][-1]),
+            "slots_materialized": lane["slots"],
+        })
+
+    flat_t = _server_phase_seconds(1)
+    hier_t = _server_phase_seconds(EDGE_GROUPS)
+    rows.append({
+        "name": "fleet_flat_server_time",
+        "us_per_call": flat_t * 1e6,
+        "derived": flat_t,
+        "edge_groups": 1,
+    })
+    rows.append({
+        "name": "fleet_hier_server_time",
+        "us_per_call": hier_t * 1e6,
+        "derived": hier_t,
+        "edge_groups": EDGE_GROUPS,
+        "speedup_vs_flat": flat_t / hier_t if hier_t > 0 else 0.0,
+    })
+    return rows

@@ -1,11 +1,17 @@
 """Turn results/dryrun.json into markdown roofline tables.
 
   PYTHONPATH=src python -m benchmarks.summarize_dryrun [results/dryrun.json]
+
+If results/bench.json (benchmarks.run output) is present next to it, the
+fleet-scale rows (bench_fleet) are summarized too: rounds/sec flatness
+across the population sweep and the flat-vs-hierarchical charged server
+time.
 """
 
 from __future__ import annotations
 
 import json
+import os
 import sys
 
 
@@ -57,6 +63,36 @@ def main(path="results/dryrun.json"):
     if coll:
         print("most collective-bound:",
               [f"{c['arch']}/{c['shape']}" for c in coll[:3]])
+
+    summarize_fleet(os.path.join(os.path.dirname(path) or ".",
+                                 "bench.json"))
+
+
+def summarize_fleet(bench_path="results/bench.json"):
+    """bench_fleet rows from benchmarks.run output (no-op if absent)."""
+    if not os.path.exists(bench_path):
+        return
+    with open(bench_path) as f:
+        rows = json.load(f)
+    pops = sorted((r for r in rows
+                   if r["name"].startswith("fleet_pop_")),
+                  key=lambda r: r["population"])
+    if pops:
+        print("\n| population | cohort | rounds/sec | time_to_target_s |")
+        print("|---|---|---|---|")
+        for r in pops:
+            print(f"| {r['population']} | {r['cohort']} | "
+                  f"{r['derived']:.2f} | {r['time_to_target']:.3g} |")
+        ratio = pops[-1]["derived"] / max(pops[0]["derived"], 1e-9)
+        print(f"rounds/sec flatness (largest/smallest pop): {ratio:.2f}")
+    flat = next((r for r in rows
+                 if r["name"] == "fleet_flat_server_time"), None)
+    hier = next((r for r in rows
+                 if r["name"] == "fleet_hier_server_time"), None)
+    if flat and hier:
+        print(f"charged server phase: flat {flat['derived']:.4g}s vs "
+              f"{hier['edge_groups']}-edge {hier['derived']:.4g}s "
+              f"(speedup {hier.get('speedup_vs_flat', 0):.2f}x)")
 
 
 if __name__ == "__main__":

@@ -60,10 +60,22 @@ def _read_meta(path: str) -> Dict:
 
 
 def load_checkpoint(path: str, like) -> Tuple[Any, Dict]:
-    """Load into the structure of `like` (shape donor pytree)."""
+    """Load into the structure of `like` (shape donor pytree).
+
+    Only the TREEDEF of `like` matters; leaf shapes come from the file
+    (population-mode slot stacks grow between saves, so sizes differ by
+    design).  A leaf-count mismatch means `like` is a structurally
+    different template (e.g. fleet-mode state offered for a
+    population-mode checkpoint) and raises instead of mis-zipping
+    leaves into the wrong slots."""
     with np.load(path) as z:
         leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
     _, treedef = jax.tree.flatten(like)
+    if treedef.num_leaves != len(leaves):
+        raise ValueError(
+            f"checkpoint {path} holds {len(leaves)} leaves but the "
+            f"donor template has {treedef.num_leaves}; the saved tree "
+            "was written with a different state template")
     tree = jax.tree.unflatten(treedef, leaves)
     return tree, _read_meta(path)
 

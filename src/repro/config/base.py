@@ -276,6 +276,16 @@ class SplitConfig:
     min_gain: float = 0.05                   # relative predicted-makespan
                                              # improvement required to move
                                              # (co_adjust hysteresis)
+    # Hierarchical (two-tier) aggregation: clients FedAvg within each of
+    # edge_groups edge aggregators, then the edges FedAvg to the server.
+    # 1 = flat single-tier (the paper path, bitwise).  The edge->server
+    # hop is priced by SpeedModel.server_ingest_bw / edge_bw.
+    edge_groups: int = 1
+    # Down-weight each client's per-inner-step gradient into the shared
+    # server adapters by 1/K_i under local_steps/async so multi-step
+    # clients do not over-train the server side.  K == 1 is bitwise
+    # either way (rounds.make_train_step).
+    server_step_norm: bool = True
 
     def buckets(self, num_layers: int) -> Tuple[int, ...]:
         if self.cut_buckets:
@@ -322,6 +332,13 @@ class DataConfig:
     samples_per_client: int = 12000   # paper: 12000
     corpus: str = "synthetic"         # synthetic | bytes:<path>
     seed: int = 0
+    # Fleet scale: total client population.  0 = fleet mode (the
+    # num_clients clients ARE the population, paper setting).  > 0 =
+    # population mode: each round a seeded cohort of num_clients ids is
+    # drawn from this many clients, with per-id persistent state
+    # (runtime.population).  population == num_clients reproduces fleet
+    # mode bitwise.
+    population: int = 0
 
 
 @dataclass(frozen=True)

@@ -34,6 +34,14 @@ Pricing is delegated to the caller through the `price` callable so the
 controller stays import-light (numpy only) and the system layer can feed
 it the exact same SpeedModel + comm accounting it charges the simulated
 clock with — which is what makes predicted == simulated testable.
+
+Under fleet-scale population mode (runtime.population) both controllers
+operate on the COHORT axis: the arrays they read and write are the
+gathered per-pid slots, and the round epilogue scatters the moved
+(cut, rank, compressor) triple and C3 weight back into each pid's slot.
+C3 state is therefore keyed by population id — a client keeps its
+allocation across cohort churn, and pids outside the current cohort are
+frozen (no decay, no drift) until they are sampled again.
 """
 
 from __future__ import annotations

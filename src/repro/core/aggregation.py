@@ -59,7 +59,8 @@ def staleness_discount(staleness, *, power: float = 0.5):
 
 def fedavg(model: Model, client_adapters: Params, cuts, weights,
            active, steps=None, staleness=None,
-           staleness_power: float = 0.5, ranks=None) -> Params:
+           staleness_power: float = 0.5, ranks=None,
+           edge_assign=None, num_edges: int = 1) -> Params:
     """Aggregate: returns the rank-2 (per-layer, no client axis) tree.
 
     steps: optional (N,) effective local-step counts; weights are divided
@@ -75,7 +76,19 @@ def fedavg(model: Model, client_adapters: Params, cuts, weights,
     back to the plain layer-level average: zeroing them would kill the
     column permanently (B=0 init means a zeroed A column gets no
     gradient), so dormant columns coast instead, ready for a future
-    rank increase."""
+    rank increase.
+
+    edge_assign/num_edges: optional hierarchical (two-tier) mode.  With
+    edge_assign (N,) mapping clients to num_edges edge groups, clients
+    first FedAvg *within* their edge (same step/staleness-normalized mu
+    as the flat path), then the edges FedAvg to the server weighted by
+    each edge's mass sum_n mu.  The composition is algebraically the
+    flat average — (sum_e denom_e * (num_e / denom_e)) / sum_e denom_e
+    = sum_n mu_n x_n / sum_n mu_n — so the two paths agree up to float
+    association; num_edges <= 1 (or edge_assign None) takes the flat
+    code path verbatim, which is the bitwise pin in
+    tests/test_population.py.  Group assignment is data (a traced (N,)
+    array), not a recompile."""
     masks = client_layer_masks(model.num_flat_layers, cuts)     # (N, M)
     w = (jnp.asarray(weights, jnp.float32)
          * jnp.asarray(active, jnp.float32))
@@ -83,6 +96,11 @@ def fedavg(model: Model, client_adapters: Params, cuts, weights,
         w = w / jnp.maximum(jnp.asarray(steps, jnp.float32), 1.0)
     if staleness is not None:
         w = w * staleness_discount(staleness, power=staleness_power)
+
+    if edge_assign is not None and num_edges > 1:
+        return _fedavg_two_tier(model, client_adapters, masks, w,
+                                ranks=ranks, edge_assign=edge_assign,
+                                num_edges=num_edges)
 
     out: Params = {}
     for gname, targets in client_adapters.items():
@@ -107,6 +125,70 @@ def fedavg(model: Model, client_adapters: Params, cuts, weights,
                 col_a = jnp.einsum("lnr,lndr->ldr", mu_col, ad["A"]) \
                     / col_denom[:, None, :]
                 col_b = jnp.einsum("lnr,lnrd->lrd", mu_col, ad["B"]) \
+                    / col_denom[:, :, None]
+                agg_a = jnp.where(owned[:, None, :], col_a, agg_a)
+                agg_b = jnp.where(owned[:, :, None], col_b, agg_b)
+            out[gname][tname] = {"A": agg_a, "B": agg_b}
+    return out
+
+
+def _fedavg_two_tier(model: Model, client_adapters: Params, masks, w,
+                     *, ranks, edge_assign, num_edges: int) -> Params:
+    """Hierarchical aggregation: clients -> edge groups -> server.
+
+    Tier 1 FedAvgs within each edge with the same normalized weights mu
+    as the flat path; tier 2 FedAvgs the edge aggregates weighted by
+    each edge's total mass denom_e = sum_{n in e} mu_n.  Edges with no
+    active owner of a layer carry denom_e ~ 0 and drop out of tier 2;
+    layers owned by nobody anywhere keep their previous value exactly as
+    in the flat path (the caller's lax.cond handles agg_every gating).
+
+    The point is not the math (it telescopes to the flat average) but
+    the *system*: with E edge aggregators the server ingests E adapter
+    streams instead of N, which runtime.straggler.SpeedModel prices in
+    the adapter_sync phase (server_ingest_bw / edge_bw)."""
+    onehot = jax.nn.one_hot(jnp.asarray(edge_assign) % num_edges,
+                            num_edges, dtype=jnp.float32)        # (N, E)
+
+    out: Params = {}
+    for gname, targets in client_adapters.items():
+        g = model.group_by_name[gname]
+        ids = jnp.asarray(g.layer_ids)
+        mu = jnp.moveaxis(jnp.take(masks, ids, axis=1), 1, 0) * w  # (Lg,N)
+        mu_e = jnp.einsum("ln,ne->lne", mu, onehot)              # (Lg,N,E)
+        denom_e = jnp.sum(mu_e, axis=1)                          # (Lg,E)
+        safe_e = jnp.maximum(denom_e, 1e-9)
+        denom = jnp.maximum(jnp.sum(denom_e, axis=1), 1e-9)      # (Lg,)
+        if ranks is not None:
+            cmask = lora_lib.rank_masks_for_group(model, g.name,
+                                                  ranks)         # (Lg,N,r)
+            mu_col = mu[..., None] * cmask                       # (Lg,N,r)
+            col_e = jnp.einsum("lnr,ne->lner", mu_col, onehot)   # (Lg,N,E,r)
+            col_sum_e = jnp.sum(col_e, axis=1)                   # (Lg,E,r)
+            col_safe_e = jnp.maximum(col_sum_e, 1e-9)
+            col_sum = jnp.sum(col_sum_e, axis=1)                 # (Lg,r)
+            col_denom = jnp.maximum(col_sum, 1e-9)
+            owned = col_sum > 1e-9                               # (Lg,r)
+        out[gname] = {}
+        for tname, ad in targets.items():
+            # tier 1: per-edge weighted mean over member clients
+            edge_a = jnp.einsum("lne,ln...->le...", mu_e, ad["A"]) \
+                / safe_e[:, :, None, None]                       # (Lg,E,d,r)
+            edge_b = jnp.einsum("lne,ln...->le...", mu_e, ad["B"]) \
+                / safe_e[:, :, None, None]
+            # tier 2: edges -> server, weighted by edge mass
+            agg_a = jnp.einsum("le,le...->l...", denom_e, edge_a) \
+                / denom[:, None, None]
+            agg_b = jnp.einsum("le,le...->l...", denom_e, edge_b) \
+                / denom[:, None, None]
+            if ranks is not None:
+                ecol_a = jnp.einsum("lner,lndr->ledr", col_e, ad["A"]) \
+                    / col_safe_e[:, :, None, :]
+                ecol_b = jnp.einsum("lner,lnrd->lerd", col_e, ad["B"]) \
+                    / col_safe_e[:, :, :, None]
+                col_a = jnp.einsum("ler,ledr->ldr", col_sum_e, ecol_a) \
+                    / col_denom[:, None, :]
+                col_b = jnp.einsum("ler,lerd->lrd", col_sum_e, ecol_b) \
                     / col_denom[:, :, None]
                 agg_a = jnp.where(owned[:, None, :], col_a, agg_a)
                 agg_b = jnp.where(owned[:, :, None], col_b, agg_b)

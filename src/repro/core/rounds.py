@@ -59,6 +59,7 @@ from repro.models.common import NO_SHARDING, ShardingPolicy
 from repro.models.model import Model
 from repro.optim import ErrorFeedback, int8_dequantize, int8_quantize, \
     make_optimizer
+from repro.runtime.sharding import constrain_client_batch, constrain_state
 
 Params = Dict[str, Any]
 
@@ -126,6 +127,8 @@ def make_train_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
                     max_local_steps: int = 1,
                     async_buffer: bool = False, buffer_size: int = 2,
                     staleness_power: float = 0.5,
+                    num_edges: int = 1,
+                    server_step_norm: bool = True,
                     jit: bool = True):
     """Build the jitted round step.
 
@@ -174,7 +177,26 @@ def make_train_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
     (with_async_buffer) and per-client optimizer step counts
     (with_per_client_opt_steps), and aggregation fires inside the tick
     only when the buffer reaches `buffer_size`, discounting each buffered
-    update by staleness_discount(staleness, power=staleness_power)."""
+    update by staleness_discount(staleness, power=staleness_power).
+
+    num_edges > 1 selects two-tier (hierarchical) aggregation: state must
+    carry "edge_assign" ((N,) int32, see with_edge_assign/prepare_state);
+    FedAvg runs clients -> edge groups -> server (aggregation.fedavg
+    edge mode).  num_edges == 1 is the flat path verbatim (bitwise pin).
+
+    server_step_norm (default True) down-weights each client's per-inner-
+    step gradient into the SHARED server adapters by 1/K_i under the
+    local-steps engine (and 1/(steps-in-buffer) under async) so a client
+    running K local steps pushes the same total server-side gradient mass
+    as a one-step client.  Forward values are unchanged; with K == 1 (or
+    an always-flushing buffer) the scale is exactly 1.0 and the step is
+    bit-identical to server_step_norm=False — the regression pin in
+    tests/test_population.py.
+
+    When policy.mesh is set, the engines also pin the client axis of the
+    state and batch to the mesh's data axis (runtime.sharding
+    constrain_state / constrain_client_batch): cohort-parallel FSDP where
+    each data-axis shard holds a slice of the cohort's adapter rows."""
     arch = model.arch
     opt = _optimizer_of(arch)
     smasher = smashed_lib.make_compressor(smashed_compress,
@@ -208,16 +230,23 @@ def make_train_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
         return _make_async_step(
             model, opt, smasher, policy=policy, remat=remat,
             ce_chunk=ce_chunk, buffer_size=buffer_size,
-            staleness_power=staleness_power, buckets=buckets, jit=jit)
+            staleness_power=staleness_power, buckets=buckets,
+            num_edges=num_edges, server_step_norm=server_step_norm,
+            jit=jit)
 
     if max_local_steps > 1:
         return _make_local_steps_step(
             model, opt, smasher, policy=policy, remat=remat,
             ce_chunk=ce_chunk, agg_every=agg_every, compress=compress,
             topk_frac=topk_frac, max_local_steps=max_local_steps,
-            buckets=buckets, jit=jit)
+            buckets=buckets, num_edges=num_edges,
+            server_step_norm=server_step_norm, jit=jit)
+
+    mesh = policy.mesh
 
     def step(base_params, state, batch, weights, active, lr_c, lr_s):
+        state = constrain_state(state, mesh)
+        batch = constrain_client_batch(batch, mesh)
         cad, sad = state["client_adapters"], state["server_adapters"]
         cuts = state["cuts"]
         rank_cut = state.get("rank_cut")
@@ -294,7 +323,8 @@ def make_train_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
             agg_every=agg_every, cad_start=cad, new_cad=new_cad,
             new_sad=new_sad, cuts=cuts, weights=weights, active=active,
             ef=state.get("ef"), round_idx=state["round"],
-            ranks=_state_ranks(model, state, cuts))
+            ranks=_state_ranks(model, state, cuts),
+            edge_assign=state.get("edge_assign"), num_edges=num_edges)
 
         new_state = dict(state)
         new_state.update(client_adapters=new_cad, server_adapters=new_sad,
@@ -305,7 +335,7 @@ def make_train_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
         if new_sm_ef is not None:
             new_state["smashed_ef"] = new_sm_ef
         metrics["total"] = total
-        return new_state, metrics
+        return constrain_state(new_state, mesh), metrics
 
     if jit:
         return jax.jit(step, donate_argnums=(1,))
@@ -314,12 +344,15 @@ def make_train_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
 
 def _round_aggregate(model: Model, *, compress, topk_frac, agg_every,
                      cad_start, new_cad, new_sad, cuts, weights, active,
-                     ef, round_idx, steps=None, ranks=None):
+                     ef, round_idx, steps=None, ranks=None,
+                     edge_assign=None, num_edges: int = 1):
     """b1-b3 at the round boundary, shared by both engines: optional
     adapter-delta compression (top-k+EF / int8), survivor- and
     step-normalized FedAvg, then the b3/b4 broadcast.  ranks: optional
     (N, M) per-client effective ranks for heterogeneous-rank column-wise
-    aggregation (aggregation.fedavg).  Returns (client_adapters', ef')."""
+    aggregation (aggregation.fedavg).  edge_assign/num_edges: optional
+    two-tier clients -> edges -> server mode (aggregation.fedavg).
+    Returns (client_adapters', ef')."""
 
     def do_agg(operand):
         cad_in, ef_in = operand
@@ -337,7 +370,9 @@ def _round_aggregate(model: Model, *, compress, topk_frac, agg_every,
                                deq, delta)
             cad_for_agg = aggregation.apply_delta(cad_start, deq)
         agg = aggregation.fedavg(model, cad_for_agg, cuts, weights,
-                                 active, steps=steps, ranks=ranks)
+                                 active, steps=steps, ranks=ranks,
+                                 edge_assign=edge_assign,
+                                 num_edges=num_edges)
         out = aggregation.broadcast_after_agg(model, cad_for_agg, agg,
                                               new_sad, cuts)
         return out, ef_out
@@ -382,6 +417,8 @@ def _select_any(step_act, new_tree, old_tree):
 def _make_local_steps_step(model: Model, opt, smasher, *, policy, remat,
                            ce_chunk, agg_every, compress, topk_frac,
                            max_local_steps: int, buckets=None,
+                           num_edges: int = 1,
+                           server_step_norm: bool = True,
                            jit: bool = True):
     """The K-inner-step engine (see make_train_step docstring).
 
@@ -392,8 +429,11 @@ def _make_local_steps_step(model: Model, opt, smasher, *, policy, remat,
     (the round-start loss), keeping loss curves comparable across
     schedulers."""
     K = max_local_steps
+    mesh = policy.mesh
 
     def step(base_params, state, batch, weights, active, lr_c, lr_s):
+        state = constrain_state(state, mesh)
+        batch = constrain_client_batch(batch, mesh, step_axis=True)
         cad, sad = state["client_adapters"], state["server_adapters"]
         cuts = state["cuts"]
         rank_cut = state.get("rank_cut")
@@ -401,6 +441,13 @@ def _make_local_steps_step(model: Model, opt, smasher, *, policy, remat,
         budgets = state["step_budgets"]
         sm_ef = state.get("smashed_ef")
         has_ef = sm_ef is not None
+        # 1/K_i server-gradient normalization (see make_train_step): a
+        # client running K_i inner steps contributes 1/K_i of its server
+        # gradient per step.  Exactly 1.0 when budgets == 1 (bitwise pin)
+        srv_scale = None
+        if server_step_norm:
+            srv_scale = 1.0 / jnp.clip(budgets.astype(jnp.float32),
+                                       1.0, float(K))
 
         def inner(carry, xs):
             mb, k = xs
@@ -417,7 +464,8 @@ def _make_local_steps_step(model: Model, opt, smasher, *, policy, remat,
 
             def loss_fn(cad_, sad_):
                 eff = split.merge_adapters(model, cad_, sad_, cuts,
-                                           rank_cut=rank_cut)
+                                           rank_cut=rank_cut,
+                                           server_scale=srv_scale)
                 per_loss, metrics = model.loss(
                     base_params, eff, mb, policy=policy, remat=remat,
                     ce_chunk=ce_chunk, per_client=True, boundary=boundary)
@@ -465,7 +513,8 @@ def _make_local_steps_step(model: Model, opt, smasher, *, policy, remat,
             agg_every=agg_every, cad_start=cad, new_cad=new_cad,
             new_sad=new_sad, cuts=cuts, weights=weights, active=active,
             ef=state.get("ef"), round_idx=state["round"],
-            steps=eff_steps, ranks=_state_ranks(model, state, cuts))
+            steps=eff_steps, ranks=_state_ranks(model, state, cuts),
+            edge_assign=state.get("edge_assign"), num_edges=num_edges)
 
         new_state = dict(state)
         new_state.update(client_adapters=new_cad, server_adapters=new_sad,
@@ -475,7 +524,7 @@ def _make_local_steps_step(model: Model, opt, smasher, *, policy, remat,
             new_state["ef"] = ef
         if new_sm_ef is not None:
             new_state["smashed_ef"] = new_sm_ef
-        return new_state, metrics
+        return constrain_state(new_state, mesh), metrics
 
     if jit:
         return jax.jit(step, donate_argnums=(1,))
@@ -488,7 +537,8 @@ def _make_local_steps_step(model: Model, opt, smasher, *, policy, remat,
 
 def _make_async_step(model: Model, opt, smasher, *, policy, remat,
                      ce_chunk, buffer_size: int, staleness_power: float,
-                     buckets=None, jit: bool = True):
+                     buckets=None, num_edges: int = 1,
+                     server_step_norm: bool = True, jit: bool = True):
     """One event tick of the buffered-asynchronous engine.
 
     step(base_params, state, batch, weights, active, lr_c, lr_s)
@@ -514,8 +564,11 @@ def _make_async_step(model: Model, opt, smasher, *, policy, remat,
     engine's first-inner-step metrics).  state["round"] counts
     aggregations, not ticks."""
     M = buffer_size
+    mesh = policy.mesh
 
     def step(base_params, state, batch, weights, active, lr_c, lr_s):
+        state = constrain_state(state, mesh)
+        batch = constrain_client_batch(batch, mesh)
         cad, sad = state["client_adapters"], state["server_adapters"]
         cuts = state["cuts"]
         n = active.shape[0]
@@ -530,10 +583,18 @@ def _make_async_step(model: Model, opt, smasher, *, policy, remat,
         boundary = _cut_boundary(smasher, buckets,
                                  state.get("smashed_choice"), cuts,
                                  residual=sm_ef)
+        # this tick is the finisher's (buffer_steps+1)-th local step since
+        # its last flush: 1/K_i server-gradient discount (see
+        # make_train_step).  Exactly 1.0 right after a flush, so an
+        # always-flushing (const-speed) run is bitwise-unchanged
+        srv_scale = None
+        if server_step_norm:
+            srv_scale = 1.0 / (state["buffer_steps"] + 1.0)
 
         def loss_fn(cad_, sad_, mb):
             eff = split.merge_adapters(model, cad_, sad_, cuts,
-                                       rank_cut=rank_cut)
+                                       rank_cut=rank_cut,
+                                       server_scale=srv_scale)
             per_loss, metrics = model.loss(
                 base_params, eff, mb, policy=policy, remat=remat,
                 ce_chunk=ce_chunk, per_client=True, boundary=boundary)
@@ -575,7 +636,9 @@ def _make_async_step(model: Model, opt, smasher, *, policy, remat,
                 model, cad_in, cuts, weights, buf_,
                 steps=jnp.maximum(bsteps_, 1.0), staleness=staleness,
                 staleness_power=staleness_power,
-                ranks=_state_ranks(model, state, cuts))
+                ranks=_state_ranks(model, state, cuts),
+                edge_assign=state.get("edge_assign"),
+                num_edges=num_edges)
             out = aggregation.broadcast_after_agg(
                 model, cad_in, agg, new_sad, cuts, recv_mask=buf_)
             new_gver = gver_ + 1
@@ -606,7 +669,7 @@ def _make_async_step(model: Model, opt, smasher, *, policy, remat,
         metrics["buffer_mask"] = buf
         metrics["staleness"] = staleness
         metrics["aggregated"] = aggregate
-        return new_state, metrics
+        return constrain_state(new_state, mesh), metrics
 
     if jit:
         return jax.jit(step, donate_argnums=(1,))
@@ -690,6 +753,17 @@ def with_rank_cut(state: Params, r_cut: int) -> Params:
     return state
 
 
+def with_edge_assign(state: Params, num_edges: int) -> Params:
+    """Attach the edge-group assignment ((N,) int32, client i -> edge
+    i % num_edges) for two-tier aggregation (make_train_step num_edges).
+    Assignment is data — the host (or population gather) may overwrite
+    it any round without recompiling."""
+    state = dict(state)
+    n = state["cuts"].shape[0]
+    state["edge_assign"] = jnp.arange(n, dtype=jnp.int32) % int(num_edges)
+    return state
+
+
 def with_smashed_choice(state: Params, index: int = 0) -> Params:
     """Attach the co-controller's per-client compressor-bucket index
     ((N,) int32 into make_train_step's compressor_buckets tuple)."""
@@ -701,7 +775,7 @@ def with_smashed_choice(state: Params, index: int = 0) -> Params:
 
 def prepare_state(state: Params, *, max_local_steps: int = 1,
                   async_buffer: bool = False, rank_cut=None,
-                  smashed_choice=None) -> Params:
+                  smashed_choice=None, edge_groups: int = 1) -> Params:
     """Attach every scheduler-conditional state leaf in one place —
     the single source of truth for the engine's state template, shared
     by SplitFTSystem and the cell builders so the two paths can never
@@ -724,6 +798,8 @@ def prepare_state(state: Params, *, max_local_steps: int = 1,
         state = with_rank_cut(state, rank_cut)
     if smashed_choice is not None:
         state = with_smashed_choice(state, smashed_choice)
+    if edge_groups > 1:
+        state = with_edge_assign(state, edge_groups)
     return state
 
 

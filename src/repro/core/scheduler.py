@@ -105,6 +105,12 @@ class RoundPlan:
                   time (async only).
     buffer_fill:  number of distinct clients in the buffer when it
                   flushed (async only; >= buffer_size by construction).
+    phases:       (P, N) per-phase one-step durations the plan was drawn
+                  from (runtime.straggler.PHASES order), or None without
+                  a speed model.  Carried through so the round record can
+                  report phase-level accounting — e.g. the charged
+                  server-phase/adapter-sync time that hierarchical
+                  aggregation reduces (benchmarks/bench_fleet.py).
     """
 
     active: np.ndarray
@@ -114,6 +120,7 @@ class RoundPlan:
     deadline: Optional[float] = None
     staleness: Optional[np.ndarray] = None
     buffer_fill: Optional[float] = None
+    phases: Optional[np.ndarray] = None
 
 
 def _barrier_time(active: np.ndarray, times: Optional[np.ndarray]) -> float:
@@ -135,7 +142,8 @@ class RoundScheduler:
         act = np.asarray(active, np.float64).copy()
         budgets = np.where(act > 0, 1, 0).astype(np.int64)
         return RoundPlan(active=act, step_budgets=budgets,
-                         sim_time=_barrier_time(act, times), times=times)
+                         sim_time=_barrier_time(act, times), times=times,
+                         phases=phases)
 
 
 class SyncScheduler(RoundScheduler):
@@ -167,7 +175,7 @@ class DeadlineScheduler(RoundScheduler):
         budgets = np.where(act > 0, 1, 0).astype(np.int64)
         return RoundPlan(active=act, step_budgets=budgets,
                          sim_time=_barrier_time(act, times), times=times,
-                         deadline=deadline)
+                         deadline=deadline, phases=phases)
 
 
 class LocalStepsScheduler(RoundScheduler):
@@ -217,7 +225,7 @@ class LocalStepsScheduler(RoundScheduler):
         else:
             sim = float((budgets[sel] * t[sel]).max())
         return RoundPlan(active=act, step_budgets=budgets, sim_time=sim,
-                         times=times)
+                         times=times, phases=phases)
 
 
 def event_client(key: Hashable) -> int:

@@ -46,9 +46,21 @@ def group_masks(model: Model, masks):
     return out
 
 
+def _grad_scaled(x, scale):
+    """Per-client gradient scaling on axis 1, forward-preserving.
+
+    a*x + (1-a)*stop_gradient(x) has cotangent a * g; its forward value
+    is x up to rounding, and at a == 1 it is x BITWISE (1.0*x = x;
+    0.0*stop_gradient(x) is a sign-matched zero, and x + (+/-0 matching
+    x's sign) = x under IEEE-754) — which is what pins the K == 1 path
+    bit-identical when the server-step normalization is enabled."""
+    a = scale.reshape((1, -1) + (1,) * (x.ndim - 2))
+    return a * x + (1.0 - a) * jax.lax.stop_gradient(x)
+
+
 def merge_adapters(model: Model, client_adapters: Params,
                    server_adapters: Params, cuts,
-                   rank_cut=None) -> Params:
+                   rank_cut=None, server_scale=None) -> Params:
     """Build the apply-ready effective adapter tree for a SplitFT step.
 
     client_adapters: rank-max tree with client axis (Lg, N, din, r).
@@ -56,7 +68,15 @@ def merge_adapters(model: Model, client_adapters: Params,
     Output leaves carry the client axis and are rank-masked + scaled with
     the per-client rank policy.  rank_cut: optional (N,) per-client
     rank-at-cut override (the co-controller's rank bucket assignment,
-    state["rank_cut"]); None keeps the static LoRAConfig.r_cut."""
+    state["rank_cut"]); None keeps the static LoRAConfig.r_cut.
+
+    server_scale: optional (N,) per-client gradient scale applied to the
+    SERVER adapters' contribution (forward-unchanged, see _grad_scaled).
+    The local-steps/async engines pass 1/K_i so that a client running K_i
+    inner steps pushes the same total gradient mass into the shared
+    server adapters as a one-step client — without it, fast clients
+    over-train the server side (ROADMAP carry).  None or all-ones is the
+    legacy gradient bitwise."""
     masks = client_layer_masks(model.num_flat_layers, cuts)    # (N, M)
     gmasks = group_masks(model, masks)
     ranks = lora_lib.effective_ranks(model.num_flat_layers, cuts,
@@ -69,9 +89,14 @@ def merge_adapters(model: Model, client_adapters: Params,
         merged[gname] = {}
         for tname, ad in targets.items():
             srv = server_adapters[gname][tname]
+            srv_a = srv["A"][:, None]
+            srv_b = srv["B"][:, None]
+            if server_scale is not None:
+                srv_a = _grad_scaled(srv_a, server_scale)
+                srv_b = _grad_scaled(srv_b, server_scale)
             merged[gname][tname] = {
-                "A": m * ad["A"] + (1.0 - m) * srv["A"][:, None],
-                "B": m * ad["B"] + (1.0 - m) * srv["B"][:, None],
+                "A": m * ad["A"] + (1.0 - m) * srv_a,
+                "B": m * ad["B"] + (1.0 - m) * srv_b,
             }
     return lora_lib.mask_adapters(model, merged, ranks)
 

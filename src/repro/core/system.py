@@ -74,6 +74,7 @@ from repro.models.common import NO_SHARDING
 from repro.models.model import Model, build_model
 from repro.runtime import straggler
 from repro.runtime.elastic import ClientPool
+from repro.runtime.population import CohortSampler, PopulationStore
 from repro.runtime.straggler import SpeedModel
 
 
@@ -114,6 +115,21 @@ class SystemConfig:
                                              # inf = zero wire time
     server_flops_per_s: Optional[float] = None  # >0 charges the server
                                                 # compute phase too
+    server_ingest_bw: Optional[float] = None  # >0 charges the server's
+                                              # adapter-ingest fan-in
+                                              # (the hop hierarchical
+                                              # aggregation shortens)
+    edge_bw: Optional[float] = None           # edge->server link (B/s)
+                                              # under edge_groups > 1
+    population: Optional[int] = None   # fleet-scale population; None ->
+                                       # arch.data.population; 0 = fleet
+                                       # mode (clients ARE the population)
+    edge_groups: Optional[int] = None  # two-tier aggregation groups;
+                                       # None -> arch.split.edge_groups
+                                       # (1 = flat, bitwise)
+    server_step_norm: Optional[bool] = None  # 1/K_i server-gradient
+                                             # normalization; None ->
+                                             # arch.split.server_step_norm
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0
     keep_checkpoints: int = 3
@@ -141,28 +157,54 @@ class SplitFTSystem:
         self.seed = seed
         n = arch.data.num_clients
         self.pool = ClientPool(n)
+        self.population = (arch.data.population
+                           if self.sys.population is None
+                           else self.sys.population) or 0
+        if 0 < self.population < n:
+            raise ValueError(
+                f"population={self.population} must be >= the cohort "
+                f"size (num_clients={n}); the engine's client axis IS "
+                "the cohort")
 
         # ---- data (C4) ----
         tok = HashTokenizer(arch.model.vocab_size)
         texts = synthetic_corpus(self.sys.num_samples, seed=arch.data.seed)
         self.samples = [np.asarray(tok.encode(t), np.int32) for t in texts]
         lengths = [len(s) for s in self.samples]
+        # fleet mode partitions over the N clients directly; population
+        # mode partitions over a fixed shard pool and maps pid -> shard
+        # (pid % shards), so the partition cost is O(shards), not O(P),
+        # and pid p sees the same shard at any population size >= shards
+        self._n_shards = (n if not self.population
+                          else min(self.population, max(n, 256)))
         parts = partition_dataset(
-            lengths, n, strategy=arch.data.partition,
+            lengths, self._n_shards, strategy=arch.data.partition,
             alpha=arch.data.alpha, num_classes=arch.data.num_length_classes,
             seed=arch.data.seed)
         self.parts = parts
-        self.loaders = make_client_loaders(
-            self.samples, parts, batch_size=arch.train.batch_size,
-            seq_len=arch.train.seq_len, seed=seed)
         eval_texts = synthetic_corpus(self.sys.eval_samples,
                                       seed=arch.data.seed + 777)
         eval_tokens = [np.asarray(tok.encode(t), np.int32)
                        for t in eval_texts]
-        self.eval_loaders = make_client_loaders(
-            [t for t in eval_tokens], [np.arange(len(eval_tokens))] * n,
-            batch_size=arch.train.batch_size, seq_len=arch.train.seq_len,
-            seed=seed + 999)
+        self._eval_tokens = eval_tokens
+        if not self.population:
+            self.loaders = make_client_loaders(
+                self.samples, parts, batch_size=arch.train.batch_size,
+                seq_len=arch.train.seq_len, seed=seed)
+            self.eval_loaders = make_client_loaders(
+                [t for t in eval_tokens], [np.arange(len(eval_tokens))] * n,
+                batch_size=arch.train.batch_size,
+                seq_len=arch.train.seq_len, seed=seed + 999)
+        else:
+            # loaders are built per-pid on cohort install; seed the slots
+            # with pids 0..n-1 (exactly the first P == C cohort, which
+            # the sampler returns without consuming RNG)
+            self._loader_cache: Dict[int, ClientDataLoader] = {}
+            self._eval_loader_cache: Dict[int, ClientDataLoader] = {}
+            pids0 = np.arange(n, dtype=np.int64)
+            self.loaders = [self._loader_for(int(p)) for p in pids0]
+            self.eval_loaders = [self._eval_loader_for(int(p))
+                                 for p in pids0]
 
         # ---- round scheduler (policy) + straggler simulation ----
         sched_name = self.sys.scheduler
@@ -197,7 +239,8 @@ class SplitFTSystem:
             overlap_comm=self.overlap_comm)
         speed_kw = {k: getattr(self.sys, k)
                     for k in ("speed_sigma", "bw_sigma", "jitter_sigma",
-                              "bw_mean", "server_flops_per_s")
+                              "bw_mean", "server_flops_per_s",
+                              "server_ingest_bw", "edge_bw")
                     if getattr(self.sys, k) is not None}
         # the co-controller prices candidates with SpeedModel.phase_times,
         # so it always carries a speed model
@@ -258,6 +301,14 @@ class SplitFTSystem:
                 d_model=arch.model.d_model,
                 topk_frac=self.smashed_topk_frac)))
 
+        # ---- hierarchical aggregation + server-step normalization ----
+        self.num_edges = max(1, (arch.split.edge_groups
+                                 if self.sys.edge_groups is None
+                                 else self.sys.edge_groups) or 1)
+        self.server_step_norm = (arch.split.server_step_norm
+                                 if self.sys.server_step_norm is None
+                                 else self.sys.server_step_norm)
+
         is_async = self.scheduler.name == "async"
         co = self.controller == "co"
         if co and use_smashed_ef:
@@ -275,7 +326,8 @@ class SplitFTSystem:
             self.state, max_local_steps=self.scheduler.max_steps,
             async_buffer=is_async,
             rank_cut=init_rank if co else None,
-            smashed_choice=init_choice if co else None)
+            smashed_choice=init_choice if co else None,
+            edge_groups=self.num_edges)
         self.train_step = rounds.make_train_step(
             self.model, policy=policy, remat=arch.train.remat,
             agg_every=self.sys.agg_every, compress=self.sys.compress,
@@ -285,7 +337,8 @@ class SplitFTSystem:
             compressor_buckets=self.comp_buckets if co else None,
             max_local_steps=self.scheduler.max_steps,
             async_buffer=is_async, buffer_size=buf,
-            staleness_power=spow, jit=jit)
+            staleness_power=spow, num_edges=self.num_edges,
+            server_step_norm=self.server_step_norm, jit=jit)
         self.eval_step = rounds.make_eval_step(self.model, policy=policy,
                                                jit=jit)
 
@@ -302,6 +355,118 @@ class SplitFTSystem:
         self._adaptive = (arch.split.adaptive if self.sys.adaptive is None
                           else self.sys.adaptive)
 
+        # ---- fleet-scale population (cohort engine) ----
+        if self.population:
+            sp_kw = (dict(speed_sigma=self.speed.speed_sigma,
+                          bw_mean=self.speed.bw_mean,
+                          bw_sigma=self.speed.bw_sigma)
+                     if self.speed is not None else {})
+            self.store = PopulationStore(self.population, self.state,
+                                         seed=seed, **sp_kw)
+            self.sampler = CohortSampler(self.population, n, seed=seed)
+        else:
+            self.store = None
+            self.sampler = None
+        self._cohort_pids: Optional[np.ndarray] = None
+        self._cohort_cursors: Optional[np.ndarray] = None
+        self._cohort_scattered = True
+
+    # ------------------------------------------------------------------
+    # fleet-scale population: cohort install / gather / scatter
+
+    def _loader_for(self, pid: int) -> ClientDataLoader:
+        """Per-pid train loader (population mode): pid p streams shard
+        p % shards with a pid-keyed seed, so its batch sequence is a
+        stable attribute surviving cohort churn.  With P == C this is
+        exactly make_client_loaders' seed + i convention."""
+        ld = self._loader_cache.get(pid)
+        if ld is None:
+            arch = self.arch
+            part = self.parts[pid % self._n_shards]
+            ld = ClientDataLoader([self.samples[j] for j in part],
+                                  batch_size=arch.train.batch_size,
+                                  seq_len=arch.train.seq_len,
+                                  seed=self.seed + pid)
+            if len(self._loader_cache) > 4 * len(self.pool.active):
+                self._loader_cache.clear()   # bound memory under churn
+            self._loader_cache[pid] = ld
+        return ld
+
+    def _eval_loader_for(self, pid: int) -> ClientDataLoader:
+        ld = self._eval_loader_cache.get(pid)
+        if ld is None:
+            arch = self.arch
+            ld = ClientDataLoader(self._eval_tokens,
+                                  batch_size=arch.train.batch_size,
+                                  seq_len=arch.train.seq_len,
+                                  seed=self.seed + 999 + pid)
+            if len(self._eval_loader_cache) > 4 * len(self.pool.active):
+                self._eval_loader_cache.clear()
+            self._eval_loader_cache[pid] = ld
+        return ld
+
+    def _install_cohort(self, pids: np.ndarray):
+        """Point the whole host side at a new cohort: gather the pids'
+        slots into engine state, recompute derived per-client arrays
+        (edge assignment, C3 weights, loaders, speed draws), and drop
+        the per-cohort memo caches."""
+        pids = np.asarray(pids, np.int64)
+        self._cohort_pids = pids
+        self.state = jax.tree.map(jnp.asarray,
+                                  self.store.gather(self.state, pids))
+        if "edge_assign" in self.state:
+            self.state["edge_assign"] = jnp.asarray(
+                pids % self.num_edges, jnp.int32)
+        self._cohort_cursors = self.store.cursors(pids)
+        self.c3_weights = self.store.c3_weights(pids)
+        self.loaders = [self._loader_for(int(p)) for p in pids]
+        self.eval_loaders = [self._eval_loader_for(int(p)) for p in pids]
+        self.sample_counts = np.array([l.num_samples()
+                                       for l in self.loaders], float)
+        if self.speed is not None:
+            sp, bw = self.store.speed_draws(pids)
+            self.speed.speed = np.asarray(sp)
+            self.speed.bandwidth = np.asarray(bw)
+        self._comm_cache = None
+        self._times_cache.clear()
+        self._cohort_scattered = False
+
+    def _pop_gather(self):
+        """Draw and install the next cohort (no-op in fleet mode)."""
+        if self.store is None:
+            return
+        if self._cohort_pids is not None and not self._cohort_scattered:
+            self._pop_scatter()        # safety: never drop a live cohort
+        self._install_cohort(self.sampler.sample())
+
+    def _pop_scatter(self):
+        """Write the live cohort's state back into the store
+        (idempotent: a second call before the next gather is a no-op, so
+        the checkpoint path inside _finish_round composes with the round
+        loop's own scatter)."""
+        if self.store is None or self._cohort_pids is None \
+                or self._cohort_scattered:
+            return
+        sched = self.scheduler
+        if sched.name == "async" and sched.started:
+            cursors = sched.launches.copy()
+        else:
+            # every cohort member consumed batch index cursor_i this
+            # round (barrier semantics: inactive/dropped clients still
+            # advance, matching the fleet path's batch(r) stream)
+            cursors = np.asarray(self._cohort_cursors) + 1
+        self.store.scatter(self.state, self._cohort_pids,
+                           cursors=cursors, c3_weights=self.c3_weights)
+        self._cohort_scattered = True
+
+    def _batch_index(self, i: int, r: int) -> int:
+        """Client slot i's batch index for barrier round r: the fleet
+        path streams by round; population mode streams by the pid's own
+        persistent cursor."""
+        if self._cohort_cursors is not None:
+            return int(self._cohort_cursors[i])
+        return r
+
     # ------------------------------------------------------------------
     def combined_weights(self) -> np.ndarray:
         """FedAvg weight |D_i|/|D| x C3 weight w_i (paper formula 2)."""
@@ -311,13 +476,16 @@ class SplitFTSystem:
         return w / s if s > 0 else w
 
     def _train_batch(self, r: int):
-        return stack_client_batches([l.batch(r) for l in self.loaders])
+        return stack_client_batches(
+            [l.batch(self._batch_index(i, r))
+             for i, l in enumerate(self.loaders)])
 
     def _train_batches(self, r: int, k: int):
         """(K, N, B, S) batch stack for the local-steps engine; inner step
         j of round r draws from the deterministic stream at r * K + j."""
-        steps = [stack_client_batches([l.batch(r * k + j)
-                                       for l in self.loaders])
+        steps = [stack_client_batches(
+                    [l.batch(self._batch_index(i, r) * k + j)
+                     for i, l in enumerate(self.loaders)])
                  for j in range(k)]
         return {key: np.stack([s[key] for s in steps])
                 for key in steps[0]}
@@ -369,12 +537,16 @@ class SplitFTSystem:
         pricing view of the exact same clock."""
         if self.speed is None:
             return None
+        ea = (np.asarray(self.state["edge_assign"])
+              if (self.num_edges > 1 and "edge_assign" in self.state)
+              else None)
         return self.speed.phase_times(
             cuts=cuts_np, flops_per_layer=self._flops_layer,
             smashed_bytes=cb["smashed_up"],
             smashed_down_bytes=cb["smashed_down"],
             adapter_bytes=cb["adapter_up"], round_idx=r,
             server_layers=self.model.num_flat_layers - cuts_np,
+            edge_assign=ea, num_edges=self.num_edges,
             jitter=jitter)
 
     def predict_round_times(self, r: int, cuts, rank_cut=None,
@@ -436,6 +608,10 @@ class SplitFTSystem:
             rec["round_time_sim"] = plan.times
             rec["sim_time"] = plan.sim_time
             rec["sim_clock"] = self.sim_clock
+        if plan.phases is not None:
+            # (5, N) per-phase durations — bench_fleet compares the
+            # charged server ingest + adapter-sync time flat vs two-tier
+            rec["phase_times"] = np.asarray(plan.phases).copy()
         # each local step is a full f2/f4 exchange, and a dropped/inactive
         # client (budget 0) transmits nothing; it still receives the b3
         # adapter broadcast but sends no b1 update.  With everyone active
@@ -535,6 +711,7 @@ class SplitFTSystem:
         k = self.scheduler.max_steps
         start = int(self.state["round"])
         for r in range(start, start + num_rounds):
+            self._pop_gather()         # population mode: next cohort in
             plan, cb = self._plan_round(r)
             batch = (self._train_batch(r) if k == 1
                      else self._train_batches(r, k))
@@ -551,6 +728,7 @@ class SplitFTSystem:
 
             rec = self._round_record(r, metrics, plan, cb)
             self._finish_round(r, rec, log_every, callback)
+            self._pop_scatter()        # cohort rows back to their slots
         return self.history
 
     # ------------------------------------------------------------------
@@ -674,6 +852,13 @@ class SplitFTSystem:
             return
         n = self.pool.active.shape[0]
         sched.start(n, clock=self.sim_clock)
+        if self._cohort_cursors is not None:
+            # population mode: each slot resumes its pid's persistent
+            # batch stream — launch counters ARE the cursors
+            cur = np.asarray(self._cohort_cursors, np.int64)
+            sched.launches = cur.copy()
+            sched.csched = cur.copy()
+            sched.cfin = cur.copy()
         cuts_np = np.asarray(self.state["cuts"])
         cb = self._cached_comm(cuts_np)
         # baseline for the flush record before anyone has completed
@@ -800,6 +985,39 @@ class SplitFTSystem:
                 self._async_launch(i, cuts_np, cb)
         sched.pending_relaunch = []
 
+    def _pop_async_boundary(self):
+        """Population mode's aggregation-boundary hook: scatter the live
+        cohort, draw the next one, and — only if membership actually
+        changed — restart the event pipeline for the new cohort at the
+        current clock.  An unchanged cohort (P == C in particular) keeps
+        its in-flight events, reproducing the fleet event stream."""
+        if self.store is None:
+            return
+        self._pop_scatter()
+        old = self._cohort_pids
+        pids = self.sampler.sample()
+        if old is not None and np.array_equal(pids, old):
+            self._cohort_pids = pids
+            self._cohort_scattered = False
+            return
+        self._install_cohort(pids)
+        sched = self.scheduler
+        n = self.pool.active.shape[0]
+        sched.start(n, clock=self.sim_clock)   # drops old in-flight work
+        cur = np.asarray(self._cohort_cursors, np.int64)
+        sched.launches = cur.copy()
+        sched.csched = cur.copy()
+        sched.cfin = cur.copy()
+        sched.last_agg_clock = self.sim_clock
+        cuts_np = np.asarray(self.state["cuts"])
+        cb = self._cached_comm(cuts_np)
+        sched.last_times = np.array(
+            [self._serial_time(i, int(sched.launches[i]), cuts_np, cb)
+             for i in range(n)])
+        for i in range(n):
+            if self.pool.active[i]:
+                self._async_launch(i, cuts_np, cb)
+
     def _run_async(self, num_rounds: int, *, log_every: int = 10,
                    callback: Optional[Callable] = None
                    ) -> List[Dict[str, Any]]:
@@ -808,6 +1026,8 @@ class SplitFTSystem:
         arch = self.arch
         lr_c = jnp.float32(arch.train.lr_client)
         lr_s = jnp.float32(arch.train.lr_server)
+        if self.store is not None and self._cohort_pids is None:
+            self._pop_gather()         # first cohort before the pipeline
         self._async_ensure_started()
         if self.scheduler.last_times is None:
             # pre-phase checkpoint restore: seed real per-launch serial
@@ -836,6 +1056,7 @@ class SplitFTSystem:
             while rec is None:
                 rec = self._async_tick(r, lr_c, lr_s)
             self._finish_round(r, rec, log_every, callback)
+            self._pop_async_boundary()
             self._async_relaunch()
         return self.history
 
@@ -868,16 +1089,33 @@ class SplitFTSystem:
             # mismatch instead of silently restarting from round 0
             "state_keys": sorted(self.state.keys()),
         }
-        if self.scheduler.name == "async":
+        if self.scheduler.name == "async" and self.store is None:
             # host-side simulation state (event queue, launch counters);
             # the buffer/version arrays are in self.state already.  Saving
-            # mid-buffer is legal: restore resumes the tick stream exactly
+            # mid-buffer is legal: restore resumes the tick stream exactly.
+            # (Population mode instead restarts the pipeline from the
+            # restored cohort cursors — launch counters live in the
+            # store's slots.)
             meta["async_sim"] = self.scheduler.state_dict()
-        self.ckpt.save(step, self.state, metadata=meta)
+        if self.store is not None:
+            # cohort rows back to their slots first so the slot map is
+            # the single source of per-pid truth in the checkpoint
+            self._pop_scatter()
+            meta["population"] = self.store.population
+            meta["cohort"] = self.store.cohort
+            # the sampler's RNG round-trips so a restored run resumes
+            # the identical cohort sequence (satellite b)
+            meta["cohort_sampler"] = self.sampler.state_dict()
+            tree = {"engine": self.state, "pop": self.store.state_tree()}
+        else:
+            tree = self.state
+        self.ckpt.save(step, tree, metadata=meta)
 
     def restore(self) -> bool:
         assert self.ckpt is not None
-        got = self.ckpt.restore_latest(self.state)
+        like = (self.state if self.store is None
+                else {"engine": self.state, "pop": self.store.state_tree()})
+        got = self.ckpt.restore_latest(like)
         if got is None:
             # distinguish "no checkpoints" from "checkpoints exist but the
             # state template changed" — resuming with a different
@@ -887,6 +1125,15 @@ class SplitFTSystem:
             steps = self.ckpt.steps()
             if steps:
                 meta = self.ckpt.metadata(steps[-1]) or {}
+                saved_pop = meta.get("population")
+                if saved_pop is not None and saved_pop != self.population:
+                    raise ValueError(
+                        f"checkpoint step {steps[-1]} was written with "
+                        f"population={saved_pop} but this run has "
+                        f"population={self.population or 'fleet mode'}; "
+                        "per-pid slot state is not transferable — "
+                        "resume with the original --population or use "
+                        "a fresh checkpoint dir")
                 saved = meta.get("scheduler")
                 if saved and saved != self.scheduler.name:
                     raise ValueError(
@@ -905,13 +1152,37 @@ class SplitFTSystem:
                         "original config or use a fresh checkpoint dir")
             return False
         tree, meta, step = got
-        self.state = jax.tree.map(jnp.asarray, tree)
+        if self.store is not None:
+            # loud mismatch checks AFTER a successful load so they are
+            # not swallowed by restore_latest's corruption fallback
+            if meta.get("population") is not None \
+                    and int(meta["population"]) != self.population:
+                raise ValueError(
+                    f"checkpoint step {step} holds population="
+                    f"{meta['population']} but this run has "
+                    f"population={self.population}; pid state is not "
+                    "transferable — resume with the original "
+                    "--population or use a fresh checkpoint dir")
+            if "cohort_sampler" not in meta:
+                raise ValueError(
+                    f"checkpoint step {step} was written in fleet mode "
+                    "(no cohort sampler state) but this run sets "
+                    f"population={self.population}; resume without "
+                    "--population or use a fresh checkpoint dir")
+            self.sampler.load_state_dict(meta["cohort_sampler"])
+            self.state = jax.tree.map(jnp.asarray, tree["engine"])
+            self.store.load_state_tree(tree["pop"])
+            self._cohort_pids = None
+            self._cohort_cursors = None
+            self._cohort_scattered = True
+        else:
+            self.state = jax.tree.map(jnp.asarray, tree)
         self.c3_weights = np.asarray(meta.get("c3_weights",
                                               self.c3_weights))
         if "active" in meta:
             self.pool.active = np.asarray(meta["active"], bool)
         self.sim_clock = float(meta.get("sim_clock", 0.0))
-        if self.scheduler.name == "async":
+        if self.scheduler.name == "async" and self.store is None:
             self.scheduler.load_state_dict(meta.get("async_sim") or {})
         return True
 

@@ -107,6 +107,20 @@ def build_parser() -> argparse.ArgumentParser:
                          "improvement required before moving a "
                          "client's triple (hysteresis)")
     ap.add_argument("--straggler-sim", action="store_true")
+    ap.add_argument("--population", type=int, default=None,
+                    help="fleet-scale mode: total client population; "
+                         "each round a seeded cohort of --cohort-size "
+                         "ids trains (persistent per-id state, "
+                         "runtime.population).  0/unset = the clients "
+                         "ARE the population (paper fleet mode)")
+    ap.add_argument("--cohort-size", type=int, default=None,
+                    help="clients sampled per round under --population "
+                         "(the engine's static client axis); default: "
+                         "the arch's num_clients")
+    ap.add_argument("--edge-groups", type=int, default=None,
+                    help="hierarchical aggregation: FedAvg clients "
+                         "within this many edge groups, then edges to "
+                         "the server; 1 = flat (bitwise paper path)")
     ap.add_argument("--samples", type=int, default=2000)
     ap.add_argument("--out", default="runs/train")
     ap.add_argument("--seed", type=int, default=0)
@@ -143,6 +157,9 @@ def main(argv=None):
     if args.lr:
         arch = arch.replace(train=dataclasses.replace(
             arch.train, lr_client=args.lr, lr_server=args.lr))
+    if args.cohort_size:
+        arch = arch.replace(data=dataclasses.replace(
+            arch.data, num_clients=args.cohort_size))
 
     os.makedirs(args.out, exist_ok=True)
     sys_cfg = SystemConfig(
@@ -161,6 +178,8 @@ def main(argv=None):
         acc_dead_band=args.acc_dead_band,
         min_gain=args.min_gain,
         straggler_sim=args.straggler_sim,
+        population=args.population,
+        edge_groups=args.edge_groups,
         checkpoint_dir=os.path.join(args.out, "ckpt"),
         checkpoint_every=max(args.rounds // 5, 1))
     system = SplitFTSystem(arch, sys_cfg, seed=args.seed)

@@ -1,9 +1,13 @@
 from repro.runtime.sharding import (  # noqa: F401
-    batch_specs, cache_specs, fit_spec, param_specs, adapter_specs,
-    shardings_for,
+    batch_specs, cache_specs, constrain_client_batch, constrain_state,
+    fit_spec, param_specs, adapter_specs, shardings_for, state_client_axis,
+    state_specs,
 )
 from repro.runtime.straggler import (  # noqa: F401
     PHASES, SpeedModel, deadline_survivors, pipelined_makespan,
-    serial_step_times,
+    population_speed_draws, serial_step_times,
 )
 from repro.runtime.elastic import ClientPool  # noqa: F401
+from repro.runtime.population import (  # noqa: F401
+    CohortSampler, PopulationStore,
+)

@@ -1,0 +1,296 @@
+"""Fleet-scale client population: per-pid slots + cohort sampling.
+
+Production cross-device FL never trains the whole fleet: each round a
+seeded sampler draws a *cohort* of C clients from a population of P
+(10^3..10^6+), and every client carries persistent state that must
+survive cohort churn — adapter rows, optimizer slots, EF residuals, the
+co-controller's (cut, rank, compressor) assignment, speed/bandwidth
+draws, and the data-shard cursor saying which batch index the client
+consumes next.
+
+The round engine stays exactly the fixed-shape jitted executable it
+always was: its client axis is the COHORT axis (size C, static).  The
+host-side pieces here bridge population and engine:
+
+  CohortSampler     seeded without-replacement draw of C pids per round;
+                    its RNG state round-trips through checkpoint
+                    metadata so a restored run resumes the identical
+                    cohort sequence.
+  PopulationStore   sparse pid -> slot map (materialized on first
+                    sample, so a 10^6 population costs memory only for
+                    pids that ever trained).  gather() assembles C
+                    slots into engine state before the step; scatter()
+                    writes the cohort's rows back after.  Which state
+                    leaves are per-client — and on which axis — comes
+                    from runtime.sharding.state_client_axis, the same
+                    table the client-axis sharding constraints use.
+
+Bitwise pins (tests/test_population.py): with P == C and the sampler
+returning everyone, gather is the identity on the initial state and the
+whole round loop reproduces the fleet path bit-for-bit; a scatter/gather
+round-trip leaves out-of-cohort slots bit-identical.
+
+A fresh pid's slot is column (pid % C) of the *initial* engine state:
+per-client rows of lora.init_adapters come from one vector draw, so this
+makes population mode's round-0 state literally the fleet init when
+P == C, and gives every pid a deterministic, seed-stable starting row
+otherwise.  Speed/bandwidth draws are keyed by pid
+(straggler.population_speed_draws), stable across cohort churn.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+
+from repro.runtime.sharding import _path_keys, state_client_axis
+from repro.runtime.straggler import population_speed_draws
+
+Params = Dict[str, Any]
+
+# state keys that are per-client but derived, not persistent identity:
+# edge_assign is recomputed from pids at gather time (pid % num_edges),
+# so it never lives in a slot
+_DERIVED_KEYS = frozenset({"edge_assign"})
+
+
+class CohortSampler:
+    """Seeded without-replacement cohort draw, checkpoint-resumable.
+
+    sample() returns C sorted distinct pids.  P == C short-circuits to
+    arange(C) (the fleet path) without consuming RNG state, so the
+    P == C bitwise pin is independent of how many rounds ran."""
+
+    def __init__(self, population: int, cohort: int, *, seed: int = 0):
+        if not 1 <= cohort <= population:
+            raise ValueError(f"cohort size {cohort} must lie in "
+                             f"[1, population={population}]")
+        self.population = int(population)
+        self.cohort = int(cohort)
+        self.seed = int(seed)
+        self._rng = np.random.RandomState(seed ^ 0x5EED5)
+
+    def sample(self) -> np.ndarray:
+        if self.cohort == self.population:
+            return np.arange(self.cohort, dtype=np.int64)
+        if self.cohort * 4 <= self.population:
+            # rejection sampling: O(C) draws, no O(P) permutation — the
+            # whole point of a sparse population
+            picked: set = set()
+            while len(picked) < self.cohort:
+                need = self.cohort - len(picked)
+                picked.update(
+                    int(p) for p in
+                    self._rng.randint(0, self.population, size=2 * need))
+                while len(picked) > self.cohort:
+                    picked.pop()
+            return np.array(sorted(picked), dtype=np.int64)
+        ids = self._rng.choice(self.population, size=self.cohort,
+                               replace=False)
+        return np.sort(ids).astype(np.int64)
+
+    # -- checkpoint round-trip (msgpack-friendly plain types) -----------
+    def state_dict(self) -> Dict[str, Any]:
+        alg, keys, pos, has_gauss, cached = self._rng.get_state()
+        return {"population": self.population, "cohort": self.cohort,
+                "alg": str(alg), "keys": [int(k) for k in keys],
+                "pos": int(pos), "has_gauss": int(has_gauss),
+                "cached": float(cached)}
+
+    def load_state_dict(self, d: Dict[str, Any]):
+        if int(d["population"]) != self.population:
+            raise ValueError(
+                f"checkpoint cohort sampler was drawn over population="
+                f"{d['population']} but this run has population="
+                f"{self.population}; pid identity is not transferable "
+                "across population sizes — resume with the original "
+                "--population or use a fresh checkpoint dir")
+        if int(d["cohort"]) != self.cohort:
+            raise ValueError(
+                f"checkpoint cohort size {d['cohort']} != this run's "
+                f"{self.cohort}; the engine's client axis is the cohort "
+                "size, so resuming needs the original --cohort-size")
+        self._rng.set_state((d["alg"],
+                             np.asarray(d["keys"], np.uint32),
+                             int(d["pos"]), int(d["has_gauss"]),
+                             float(d["cached"])))
+
+
+def _client_leaves(state: Params):
+    """[(path tuple, leaf, client axis)] for every persistent per-client
+    leaf of the engine state (derived keys excluded)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(state)
+    out = []
+    for path, leaf in flat:
+        keys = _path_keys(path)
+        if keys and keys[0] in _DERIVED_KEYS:
+            continue
+        ax = state_client_axis(keys, np.ndim(leaf))
+        if ax is not None:
+            out.append((keys, leaf, ax))
+    return out
+
+
+class PopulationStore:
+    """Sparse pid -> slot map over the engine state's per-client leaves.
+
+    template_state: the INITIAL prepared engine state (cohort shape C on
+    every client axis).  Fresh pids materialize from its column
+    (pid % C); C also fixes the gather shape."""
+
+    def __init__(self, population: int, template_state: Params, *,
+                 seed: int = 0, speed_sigma: float = 0.5,
+                 bw_mean: float = 100e6, bw_sigma: float = 0.7):
+        self.population = int(population)
+        self.seed = int(seed)
+        self.speed_sigma = float(speed_sigma)
+        self.bw_mean = float(bw_mean)
+        self.bw_sigma = float(bw_sigma)
+        # leafpath -> (C, ...) rows (client axis moved to the front)
+        self._template: Dict[str, np.ndarray] = {}
+        self._axes: List[Tuple[Tuple[str, ...], int]] = []
+        self._axis_of: Dict[str, int] = {}
+        cohort = None
+        for keys, leaf, ax in _client_leaves(template_state):
+            rows = np.moveaxis(np.asarray(leaf), ax, 0)
+            self._template["/".join(keys)] = np.ascontiguousarray(rows)
+            self._axes.append((keys, ax))
+            self._axis_of["/".join(keys)] = ax
+            cohort = rows.shape[0]
+        if cohort is None:
+            raise ValueError("state has no per-client leaves")
+        self.cohort = int(cohort)
+        # pid -> {"rows": {leafpath: np row}, "cursor", "c3", "speed", "bw"}
+        self._slots: Dict[int, Dict[str, Any]] = {}
+
+    # -- slot lifecycle -------------------------------------------------
+    def _materialize(self, pid: int) -> Dict[str, Any]:
+        slot = self._slots.get(pid)
+        if slot is None:
+            speed, bw = population_speed_draws(
+                [pid], seed=self.seed, speed_sigma=self.speed_sigma,
+                bw_mean=self.bw_mean, bw_sigma=self.bw_sigma)
+            slot = {
+                "rows": {k: v[pid % self.cohort].copy()
+                         for k, v in self._template.items()},
+                "cursor": 0,
+                "c3": 1.0,
+                "speed": float(speed[0]),
+                "bw": float(bw[0]),
+            }
+            self._slots[pid] = slot
+        return slot
+
+    def __len__(self) -> int:
+        return len(self._slots)
+
+    # -- cohort gather/scatter ------------------------------------------
+    def gather(self, state: Params, pids: Sequence[int]) -> Params:
+        """Assemble the cohort's slots into a full engine state: every
+        per-client leaf is restacked from the pids' slot rows (global
+        leaves pass through untouched)."""
+        pids = np.asarray(pids, np.int64)
+        if pids.shape[0] != self.cohort:
+            raise ValueError(f"cohort of {pids.shape[0]} pids does not "
+                             f"fit the engine's client axis "
+                             f"({self.cohort})")
+        slots = [self._materialize(int(p)) for p in pids]
+        flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+        leaves = []
+        for path, leaf in flat:
+            keys = _path_keys(path)
+            lp = "/".join(keys)
+            if lp in self._template:
+                ax = self._axis_of[lp]
+                stacked = np.stack([s["rows"][lp] for s in slots])
+                leaves.append(np.moveaxis(stacked, 0, ax))
+            else:
+                leaves.append(leaf)
+        return jax.tree.unflatten(treedef, leaves)
+
+    def scatter(self, state: Params, pids: Sequence[int], *,
+                cursors: Optional[Sequence[int]] = None,
+                c3_weights: Optional[Sequence[float]] = None):
+        """Write the cohort's post-round rows back into their slots.
+        Slots of pids outside the cohort are untouched (bit-identical) —
+        pinned by tests/test_population.py."""
+        pids = np.asarray(pids, np.int64)
+        for keys, ax in self._axes:
+            lp = "/".join(keys)
+            leaf = state
+            for k in keys:
+                leaf = leaf[k]
+            rows = np.moveaxis(np.asarray(leaf), ax, 0)
+            for j, pid in enumerate(pids):
+                self._slots[int(pid)]["rows"][lp] = np.array(rows[j])
+        if cursors is not None:
+            for j, pid in enumerate(pids):
+                self._slots[int(pid)]["cursor"] = int(cursors[j])
+        if c3_weights is not None:
+            for j, pid in enumerate(pids):
+                self._slots[int(pid)]["c3"] = float(c3_weights[j])
+
+    # -- per-pid host-side attributes -----------------------------------
+    def cursors(self, pids: Sequence[int]) -> np.ndarray:
+        return np.array([self._materialize(int(p))["cursor"]
+                         for p in pids], np.int64)
+
+    def c3_weights(self, pids: Sequence[int]) -> np.ndarray:
+        return np.array([self._materialize(int(p))["c3"]
+                         for p in pids], np.float64)
+
+    def speed_draws(self, pids: Sequence[int]
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(speed, bandwidth) per pid — stable across cohort churn."""
+        speed = np.array([self._materialize(int(p))["speed"]
+                          for p in pids], np.float64)
+        bw = np.array([self._materialize(int(p))["bw"]
+                       for p in pids], np.float64)
+        return speed, bw
+
+    # -- checkpoint round-trip ------------------------------------------
+    def state_tree(self) -> Params:
+        """The store as a fixed-treedef pytree for checkpoint/store.py:
+        {"pids","cursors","c3","speed","bw","rows":{leafpath: (K,...)}}
+        with K = number of materialized slots.  The treedef is
+        K-independent (same keys whatever K, K = 0 included), so
+        load_checkpoint's shape-donor contract works with a fresh
+        store."""
+        pids = sorted(self._slots)
+        rows = {}
+        for lp, tmpl in sorted(self._template.items()):
+            if pids:
+                rows[lp] = np.stack([self._slots[p]["rows"][lp]
+                                     for p in pids])
+            else:
+                rows[lp] = np.zeros((0,) + tmpl.shape[1:], tmpl.dtype)
+        return {
+            "pids": np.asarray(pids, np.int64),
+            "cursors": np.array([self._slots[p]["cursor"] for p in pids],
+                                np.int64),
+            "c3": np.array([self._slots[p]["c3"] for p in pids],
+                           np.float64),
+            "speed": np.array([self._slots[p]["speed"] for p in pids],
+                              np.float64),
+            "bw": np.array([self._slots[p]["bw"] for p in pids],
+                           np.float64),
+            "rows": rows,
+        }
+
+    def load_state_tree(self, tree: Params):
+        """Rebuild the slot map from state_tree() output (numpy arrays
+        as loaded by checkpoint.load_checkpoint)."""
+        pids = np.asarray(tree["pids"], np.int64)
+        self._slots = {}
+        for j, pid in enumerate(pids):
+            self._slots[int(pid)] = {
+                "rows": {lp: np.array(arr[j])
+                         for lp, arr in tree["rows"].items()},
+                "cursor": int(np.asarray(tree["cursors"])[j]),
+                "c3": float(np.asarray(tree["c3"])[j]),
+                "speed": float(np.asarray(tree["speed"])[j]),
+                "bw": float(np.asarray(tree["bw"])[j]),
+            }

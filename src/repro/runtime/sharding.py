@@ -30,6 +30,103 @@ FSDP_AXES = ("pod", "data")
 TP_AXIS = "model"
 CLIENT_AXIS = "data"
 
+# ---------------------------------------------------------------------------
+# Round-state client-slot rules.
+#
+# The round engine's state dict mixes global leaves (server adapters,
+# round counter) with per-client ones.  These tables are THE source of
+# truth for which top-level keys carry a client axis and where — shared
+# by the sharding constraints below (client axis -> the data mesh axis)
+# and by runtime.population.PopulationStore (client axis -> per-pid
+# slot rows), so the two can never disagree about what "per-client"
+# means.
+
+# (N, ...) leaves: the client axis leads.
+STATE_CLIENT_VECTOR_KEYS = frozenset({
+    "cuts", "step_budgets", "buffer_mask", "buffer_steps",
+    "adapter_version", "rank_cut", "smashed_choice", "smashed_ef",
+    "edge_assign",
+})
+# Trees of client-stacked adapter-shaped leaves ((Lg, N, din, r)): the
+# client axis is axis 1.  opt_c mirrors client_adapters leaf-for-leaf
+# except its step counter ("count"), which is (N,) after
+# with_per_client_opt_steps and a global scalar before.
+STATE_CLIENT_TREE_KEYS = frozenset({"client_adapters", "ef", "opt_c"})
+
+
+def state_client_axis(path: Tuple[str, ...], ndim: int) -> Optional[int]:
+    """Client-axis position of a round-state leaf at `path` (top-level
+    key first), or None for global leaves."""
+    if not path:
+        return None
+    top = path[0]
+    if top in STATE_CLIENT_VECTOR_KEYS:
+        return 0
+    if top in STATE_CLIENT_TREE_KEYS:
+        if path[-1] == "count":
+            return 0 if ndim == 1 else None
+        return 1 if ndim >= 2 else None
+    return None
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "idx", "?")))
+                 for p in path)
+
+
+def state_specs(state, mesh: Mesh):
+    """PartitionSpec tree for the round-engine state: every client axis
+    (state_client_axis) shards over the data mesh axis, everything else
+    replicates.  fit_spec drops the axis when the cohort size does not
+    divide it (divisibility fallback)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    specs = []
+    for path, leaf in flat:
+        nd = np.ndim(leaf)
+        ax = state_client_axis(_path_keys(path), nd)
+        if ax is None:
+            logical = (None,) * nd
+        else:
+            logical = tuple(CLIENT_AXIS if i == ax else None
+                            for i in range(nd))
+        specs.append(fit_spec(np.shape(leaf), logical, mesh))
+    return jax.tree.unflatten(treedef, specs)
+
+
+def constrain_state(state, mesh: Optional[Mesh]):
+    """with_sharding_constraint the round state's client axis over the
+    data mesh axis (no-op without a mesh).  Called at engine entry and
+    exit, this doubles as the jitted step's in/out shardings for the
+    state argument."""
+    if mesh is None:
+        return state
+    specs = state_specs(state, mesh)
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, s)), state, specs)
+
+
+def constrain_client_batch(batch, mesh: Optional[Mesh], *,
+                           step_axis: bool = False):
+    """with_sharding_constraint a client-stacked batch ((N, B, S) leaves,
+    or (K, N, B, S) with step_axis=True under the local-steps engine):
+    clients over the data axis, per-client batch over the remaining FSDP
+    axes (batch_specs' client_dim=True rule)."""
+    if mesh is None:
+        return batch
+    rest = tuple(a for a in FSDP_AXES if a != CLIENT_AXIS)
+
+    def spec_of(leaf):
+        nd = np.ndim(leaf)
+        pre = (None,) if step_axis else ()
+        logical = pre + (CLIENT_AXIS, rest)
+        logical = logical + (None,) * (nd - len(logical))
+        return fit_spec(np.shape(leaf), logical, mesh)
+
+    return jax.tree.map(
+        lambda x: jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec_of(x))), batch)
+
 
 def _axis_size(mesh: Mesh, name) -> int:
     if isinstance(name, tuple):

@@ -57,6 +57,17 @@ class SpeedModel:
     server_flops_per_s: float = 0.0  # 0 -> server compute is free (the
                                      # datacenter server is never the
                                      # bottleneck; legacy clock parity)
+    server_ingest_bw: float = 0.0    # >0 -> the server's shared adapter-
+                                     # sync ingest link (bytes/s): flat
+                                     # aggregation serializes EVERY
+                                     # client's b1 upload through it;
+                                     # hierarchical (edge_assign) only
+                                     # one pre-aggregated update per
+                                     # edge group.  0 = infinite ingest
+                                     # (legacy clock, bitwise)
+    edge_bw: float = 0.0             # >0 -> client->edge hop bandwidth
+                                     # (bytes/s) charged per client under
+                                     # hierarchical aggregation; 0 = free
 
     def __post_init__(self):
         rng = np.random.RandomState(self.seed)
@@ -70,6 +81,8 @@ class SpeedModel:
                     round_idx: int = 0, ref_flops_per_s: float = 5e12,
                     server_layers: Optional[Sequence[int]] = None,
                     smashed_down_bytes=None,
+                    edge_assign: Optional[Sequence[int]] = None,
+                    num_edges: int = 1,
                     jitter: bool = True) -> np.ndarray:
         """(5, N) per-client phase durations for one local step.
 
@@ -89,7 +102,18 @@ class SpeedModel:
         phase times the adaptive co-controller prices candidate (cut,
         rank, compressor) assignments with; with jitter_sigma == 0 the
         jittered and unjittered clocks coincide exactly, which is what
-        makes predicted-vs-simulated makespan testable."""
+        makes predicted-vs-simulated makespan testable.
+
+        server_ingest_bw > 0 adds the server's SHARED adapter-ingest
+        serialization to the adapter_sync row (un-jittered; it is the
+        server's link, not the client's): flat topology pushes every
+        client's b1 bytes through it, while hierarchical aggregation
+        (edge_assign (N,) group ids + num_edges > 1) pushes one
+        pre-aggregated update per edge group — sum over groups of the
+        group's largest member payload — plus a per-client client->edge
+        hop at edge_bw.  With at least one multi-member group the
+        hierarchical charge is strictly smaller; with
+        server_ingest_bw == 0 the row is the legacy clock bitwise."""
         if jitter:
             rng = np.random.RandomState(round_idx * 7919 + self.seed)
             jit = np.exp(rng.normal(0.0, self.jitter_sigma,
@@ -106,6 +130,20 @@ class SpeedModel:
         f4 = down / self.bandwidth * jit
         adapter = np.asarray(adapter_bytes, np.float64) \
             / self.bandwidth * jit
+        if self.server_ingest_bw > 0:
+            ab = np.broadcast_to(
+                np.asarray(adapter_bytes, np.float64),
+                (self.num_clients,)).astype(np.float64)
+            if edge_assign is not None and num_edges > 1:
+                ea = np.asarray(edge_assign, np.int64) % num_edges
+                per_edge = np.zeros(num_edges, np.float64)
+                np.maximum.at(per_edge, ea, ab)
+                ingest = per_edge.sum() / self.server_ingest_bw
+                if self.edge_bw > 0:
+                    adapter = adapter + ab / self.edge_bw
+            else:
+                ingest = ab.sum() / self.server_ingest_bw
+            adapter = adapter + ingest
         if self.server_flops_per_s > 0 and server_layers is not None:
             server = np.asarray(server_layers, np.float64) \
                 * flops_per_layer * 3.0 / self.server_flops_per_s * jit
@@ -124,6 +162,32 @@ class SpeedModel:
             cuts=cuts, flops_per_layer=flops_per_layer,
             smashed_bytes=smashed_bytes, adapter_bytes=adapter_bytes,
             round_idx=round_idx, ref_flops_per_s=ref_flops_per_s))
+
+
+def population_speed_draws(pids: Sequence[int], *, seed: int = 0,
+                           speed_sigma: float = 0.5,
+                           bw_mean: float = 100e6,
+                           bw_sigma: float = 0.7
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-POPULATION-ID (speed, bandwidth) lognormal draws.
+
+    SpeedModel's fleet draws are positional (client slot i), which breaks
+    under cohort sampling: slot i holds a different pid every round.
+    These draws are keyed by pid — each pid seeds its own tiny RNG — so a
+    client's speed is a stable attribute that survives cohort churn,
+    restore, and population growth (pid p draws the same pair whether the
+    population is 10^3 or 10^6).  With both sigmas 0 every pid gets
+    (1.0, bw_mean), matching a sigma-0 SpeedModel exactly."""
+    pids = np.asarray(pids, np.int64)
+    speed = np.empty(pids.shape[0], np.float64)
+    bw = np.empty(pids.shape[0], np.float64)
+    for j, pid in enumerate(pids):
+        rng = np.random.RandomState(
+            (int(pid) * 2654435761 + seed * 1000003 + 17) & 0x7FFFFFFF)
+        z = rng.normal(0.0, 1.0, 2)
+        speed[j] = np.exp(speed_sigma * z[0])
+        bw[j] = bw_mean * np.exp(bw_sigma * z[1])
+    return speed, bw
 
 
 def serial_step_times(phases: np.ndarray) -> np.ndarray:
