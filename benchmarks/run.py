@@ -32,6 +32,7 @@ BENCHES = [
     "bench_smashed",        # beyond paper (smashed f2/f4 channel)
     "bench_scheduler",      # beyond paper (round schedulers, time-to-loss)
     "bench_fleet",          # beyond paper (population sweep + two-tier agg)
+    "bench_serve",          # beyond paper (multi-adapter serving engine)
     "bench_roofline",       # §Roofline summary
 ]
 

@@ -66,6 +66,10 @@ def decode_attention(q, k, v, cache_len, *, scale: Optional[float] = None,
 
     scores = jnp.einsum("bgkd,bsgd->bgks", qg, k,
                         preferred_element_type=jnp.float32)   # (B,G,grp,S)
+    return _finish_dense(scores, v, cache_len, window, q, b, h, hd, s)
+
+
+def _finish_dense(scores, v, cache_len, window, q, b, h, hd, s):
     pos = jnp.arange(s)[None, :]                              # (1,S)
     valid = pos < cache_len[:, None]
     if window > 0:
@@ -75,3 +79,24 @@ def decode_attention(q, k, v, cache_len, *, scale: Optional[float] = None,
     out = jnp.einsum("bgks,bsgd->bgkd", probs.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
     return out.reshape(b, h, hd).astype(q.dtype)
+
+
+def decode_attention_paged(q, k_pool, v_pool, page_table, cache_len, *,
+                           scale: Optional[float] = None, window: int = 0):
+    """Paged-cache variant: the cache lives in a shared page pool and each
+    sequence addresses it through a page table.
+
+    q: (B, H, hd); k_pool/v_pool: (n_pages, ps, KVH, hd);
+    page_table: (B, P_max) int32 — entry p is the pool page holding
+    positions [p*ps, (p+1)*ps); entries past the allocated prefix may be
+    any value (they are clipped here and masked by cache_len).
+    cache_len: (B,) int32, same semantics as the contiguous path.
+    """
+    n_pages = k_pool.shape[0]
+    pt = jnp.clip(page_table, 0, n_pages - 1)
+    k = jnp.take(k_pool, pt, axis=0)              # (B, Pm, ps, KVH, hd)
+    v = jnp.take(v_pool, pt, axis=0)
+    b, pm, ps, kvh, hd = k.shape
+    return decode_attention(q, k.reshape(b, pm * ps, kvh, hd),
+                            v.reshape(b, pm * ps, kvh, hd), cache_len,
+                            scale=scale, window=window)

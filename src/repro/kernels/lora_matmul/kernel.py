@@ -146,6 +146,94 @@ def lora_matmul_pallas(x, w, a, b, scale, *, bm: int = DEFAULT_BM,
 
 
 # ---------------------------------------------------------------------------
+# indexed multi-adapter forward (serving, inference-only)
+
+
+def _indexed_kernel(ids_ref, scale_ref, x_ref, w_ref, a_ref, b_ref, y_ref,
+                    acc_ref, xa_ref, *, n_k: int):
+    """One grid row per request slot: the adapter tiles for this row were
+    DMA'd by the scalar-prefetch index maps (a/b block index = ids[row]),
+    so the body is exactly the fused forward at bm=1."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(jnp.logical_and(j == 0, k == 0))
+    def _zero_xa():
+        xa_ref[...] = jnp.zeros_like(xa_ref)
+
+    x = x_ref[...]
+    acc_ref[...] += jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _accum_xa():
+        xa_ref[...] += jnp.dot(x, a_ref[0],
+                               preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        scale = scale_ref[ids_ref[i]].astype(jnp.float32)
+        delta = jnp.dot(xa_ref[...], b_ref[0].astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        y_ref[...] = (acc_ref[...] + scale * delta).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
+def lora_matmul_indexed_pallas(x, w, a_pool, b_pool, scale, ids, *,
+                               bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                               interpret: bool = False):
+    """x: (M, K); w: (K, N); a_pool: (P, K, r); b_pool: (P, r, N);
+    scale: (P,); ids: (M,) int32 -> y (M, N).
+
+    S-LoRA-style decode projection: every x row is one serving slot's
+    token and gathers its own adapter out of the stacked pool via the
+    scalar-prefetched ids in the a/b BlockSpec index maps — the pool
+    stays in HBM, only the referenced (bk, r)/(r, bn) tiles move."""
+    m, k_dim = x.shape
+    _, n = w.shape
+    r = a_pool.shape[2]
+
+    bn = min(bn, n)
+    bk = min(bk, k_dim)
+    if n % bn or k_dim % bk:
+        raise ValueError(f"shape ({m},{k_dim},{n}) not divisible by blocks "
+                         f"({bk},{bn}); pad in the wrapper")
+    n_k = k_dim // bk
+    grid = (m, n // bn, n_k)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # ids, scale
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bk), lambda i, j, k, ids, s: (i, k)),    # x
+            pl.BlockSpec((bk, bn), lambda i, j, k, ids, s: (k, j)),   # w
+            pl.BlockSpec((1, bk, r),
+                         lambda i, j, k, ids, s: (ids[i], k, 0)),     # A[ids]
+            pl.BlockSpec((1, r, bn),
+                         lambda i, j, k, ids, s: (ids[i], 0, j)),     # B[ids]
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda i, j, k, ids, s: (i, j)),
+        scratch_shapes=[
+            pltpu.VMEM((1, bn), jnp.float32),    # acc
+            pltpu.VMEM((1, r), jnp.float32),     # xa
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_indexed_kernel, n_k=n_k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), scale.astype(jnp.float32), x, w, a_pool, b_pool)
+
+
+# ---------------------------------------------------------------------------
 # backward
 
 

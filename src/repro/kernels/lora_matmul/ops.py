@@ -22,6 +22,7 @@ cotangent returned for W is a symbolic zero that XLA dead-code-eliminates.
 from __future__ import annotations
 
 import functools
+import math
 import os
 
 import jax
@@ -29,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.kernels.lora_matmul import ref
 from repro.kernels.lora_matmul.kernel import (lora_matmul_bwd_pallas,
+                                              lora_matmul_indexed_pallas,
                                               lora_matmul_pallas)
 
 
@@ -174,6 +176,32 @@ def _make_lora(lora_only: bool):
 
     f.defvjp(fwd, bwd)
     return f
+
+
+def lora_matmul_indexed(x, w, a_pool, b_pool, scale, ids):
+    """Multi-adapter projection: y[i] = x[i] @ W + s[ids[i]] *
+    (x[i] @ A[ids[i]]) @ B[ids[i]].
+
+    x: (B, ..., K) with ids (B,) int32 picking each leading row's adapter
+    from the stacked (P, K, r)/(P, r, N) pools; scale: (P,).  Inference
+    only (serving) — no custom VJP; heterogeneous ranks ride masked rank
+    slots in the pools exactly as state["rank_cut"] does in training."""
+    if not _use_pallas():
+        return ref.lora_matmul_indexed(x, w, a_pool, b_pool, scale, ids)
+    lead = x.shape[:-1]
+    k_dim = x.shape[-1]
+    n = w.shape[1]
+    x2 = x.reshape(-1, k_dim)
+    # per-token row ids: repeat each slot's id over its trailing dims
+    reps = math.prod(lead[1:]) if len(lead) > 1 else 1
+    row_ids = jnp.repeat(ids.astype(jnp.int32), reps)
+
+    _, bn, bk = _blocks_for(x2.shape[0], n, k_dim)
+    a_p, _ = _pad_to(a_pool, 8, 2)
+    b_p, _ = _pad_to(b_pool, 8, 1)
+    y = lora_matmul_indexed_pallas(x2, w, a_p, b_p, scale, row_ids,
+                                   bn=bn, bk=bk, interpret=_interpret())
+    return y.reshape(lead + (n,))
 
 
 def lora_matmul(x, w, a, b, scale, *, lora_only: bool = False):

@@ -1,10 +1,15 @@
-"""Serving driver: batched prefill + decode of a fine-tuned global model.
+"""Serving driver: continuous-batching multi-adapter inference.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gpt2-small \
-      --reduced --batch 4 --prompt-len 32 --gen 16
+      --reduced --adapters 4 --requests 16 --arrival-rate 8 \
+      --num-slots 4 --page-size 16
 
-Loads a SplitFT checkpoint when given (--ckpt), otherwise serves the
-freshly initialized model (useful for shape/pipeline validation).
+Thin CLI over runtime.serving.ServingEngine: builds (or loads) a stacked
+per-client adapter pool, synthesizes a Poisson request workload, runs the
+engine, and prints latency/throughput.  With --ckpt the pool is the
+SplitFT checkpoint's per-client personalized adapters — gathered from
+PopulationStore slots in population mode, so --adapters picks how many
+fleet members to serve.
 """
 
 from __future__ import annotations
@@ -16,80 +21,102 @@ import time
 import numpy as np
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt2-small")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--adapters", type=int, default=4,
+                    help="number of adapters in the serving pool")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="number of requests in the workload")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrivals/sec (0 = all arrive at t=0)")
+    ap.add_argument("--num-slots", type=int, default=4,
+                    help="concurrent decode slots (continuous batch size)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="KV cache page size in tokens (0 = contiguous)")
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="per-slot KV capacity (0 = prompt-len + gen)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     import jax
-    import jax.numpy as jnp
     from repro.config import reduced as reduced_cfg
     from repro.configs import get_config
-    from repro.core import lora as lora_lib
     from repro.core.system import SplitFTSystem, SystemConfig
     from repro.models.model import build_model
+    from repro.runtime import serving
 
     arch = get_config(args.arch)
     if args.reduced:
         arch = reduced_cfg(arch)
     model = build_model(arch)
+    # independent keys per consumer — reusing one key across init_params,
+    # the adapter pool, and the prompt draw correlates "random" streams
     key = jax.random.PRNGKey(args.seed)
+    k_params, k_pool, k_prompts = jax.random.split(key, 3)
 
     if args.ckpt:
         system = SplitFTSystem(
             arch, SystemConfig(num_samples=64, eval_samples=16,
                                checkpoint_dir=args.ckpt), seed=args.seed)
         assert system.restore(), f"no checkpoint under {args.ckpt}"
-        params, adapters = system.serve_model()
+        params = system.base_params
+        if system.store is not None:
+            pool = serving.pool_from_population(
+                model, system.state, system.store,
+                list(range(args.adapters)))
+        else:
+            pool = serving.pool_from_state(model, system.state)
+            n = serving.num_pool_adapters(pool)
+            if args.adapters > n:
+                raise ValueError(
+                    f"--adapters {args.adapters} exceeds the checkpoint's "
+                    f"{n} per-client adapters")
+            pool = jax.tree.map(lambda v: v[:, :args.adapters], pool)
     else:
-        params = model.init_params(key)
-        ad = lora_lib.init_adapters(model, key)
-        ranks = jnp.full((model.num_flat_layers,), arch.lora.r_others,
-                         jnp.int32)
-        adapters = lora_lib.mask_adapters(model, ad, ranks)
+        params = model.init_params(k_params)
+        pool = serving.build_adapter_pool(model, k_pool, args.adapters)
 
-    b, pl, g = args.batch, args.prompt_len, args.gen
+    max_len = args.max_len or (args.prompt_len + args.gen)
+    cfg = serving.ServeConfig(num_slots=args.num_slots, max_len=max_len,
+                              page_size=args.page_size)
+    engine = serving.ServingEngine(model, params, pool, cfg)
+
+    rng = np.random.default_rng(
+        int(jax.random.randint(k_prompts, (), 0, 2**31 - 1)))
     v = arch.model.vocab_size
-    tokens = jax.random.randint(key, (b, pl), 3, v)
-    extra = {}
-    if arch.model.family == "audio":
-        extra["frames"] = jax.random.normal(
-            key, (b, arch.model.encoder_seq_len, arch.model.d_model)) * 0.02
-    if arch.model.family == "vlm" and arch.model.frontend_prefix_len:
-        extra["prefix"] = jax.random.normal(
-            key, (b, arch.model.frontend_prefix_len,
-                  arch.model.d_model)) * 0.02
-
-    cache = model.init_cache((b,), pl + g)
-
-    prefill = jax.jit(lambda p, a, bt, c: model.prefill(p, a, bt, c))
-    decode = jax.jit(lambda p, a, t, c: model.decode_step(p, a, t, c))
+    arrivals = (np.cumsum(rng.exponential(1.0 / args.arrival_rate,
+                                          args.requests))
+                if args.arrival_rate > 0 else np.zeros(args.requests))
+    reqs = [serving.Request(
+        rid=i, adapter=i % args.adapters,
+        tokens=rng.integers(3, v, size=args.prompt_len),
+        max_new=args.gen, arrival=float(arrivals[i]))
+        for i in range(args.requests)]
 
     t0 = time.time()
-    batch = {"tokens": tokens}
-    batch.update(extra)
-    logits, cache = prefill(params, adapters, batch, cache)
-    nxt = jnp.argmax(logits[:, -1], -1)[:, None]
-    out = [np.asarray(nxt)]
-    t1 = time.time()
-    for _ in range(g - 1):
-        logits, cache = decode(params, adapters, nxt, cache)
-        nxt = jnp.argmax(logits[:, -1], -1)[:, None]
-        out.append(np.asarray(nxt))
-    jax.block_until_ready(nxt)
-    t2 = time.time()
+    results = engine.run(reqs)
+    wall = time.time() - t0
 
-    gen = np.concatenate(out, axis=1)
-    print(f"prefill {b}x{pl}: {t1 - t0:.3f}s   "
-          f"decode {g - 1} steps: {t2 - t1:.3f}s "
-          f"({(t2 - t1) / max(g - 1, 1) * 1e3:.1f} ms/tok)")
-    print(f"generated ids (first row): {gen[0][:16].tolist()}")
+    lat = np.array([r["t_done"] - r["t_submit"] for r in results])
+    ttft = np.array([r["t_first"] - r["t_submit"] for r in results])
+    toks = sum(len(r["tokens"]) for r in results)
+    print(f"served {len(results)} requests x {args.gen} tokens over "
+          f"{args.adapters} adapters in {wall:.3f}s "
+          f"({toks / wall:.1f} tok/s, decode traces="
+          f"{engine.decode_traces['n']})")
+    print(f"latency p50 {np.percentile(lat, 50) * 1e3:.1f} ms   "
+          f"p99 {np.percentile(lat, 99) * 1e3:.1f} ms   "
+          f"ttft p50 {np.percentile(ttft, 50) * 1e3:.1f} ms")
+    print(f"generated ids (rid 0): {results[0]['tokens'][:16]}")
     return 0
 
 

@@ -361,6 +361,9 @@ class Model:
         p_g = params[g.name]
         ad_g = adapters.get(g.name) if adapters else None
         cache_g = cache.get(g.name) if cache else None
+        # paged serving cache: the (B, P_max) page table is layer-shared
+        # (one table addresses every layer's page pool)
+        cache_pages = cache.get("pages") if cache else None
 
         def slice_tree(t, a, b):
             return jax.tree.map(lambda v: v[a:b], t) if t is not None else None
@@ -376,6 +379,8 @@ class Model:
             if g.kind == "ssm":
                 return {"conv": c_l["conv"], "state": c_l["state"]}, None
             self_c = {"k": c_l["k"], "v": c_l["v"], "len": cache_len}
+            if cache_pages is not None:
+                self_c["pages"] = cache_pages
             mem_c = None
             if g.cross:
                 mem_c = ({"k": c_l["xk"], "v": c_l["xv"]}
@@ -418,6 +423,7 @@ class Model:
                     if g.kind != "ssm":
                         c_new = dict(c_new)
                         c_new.pop("len", None)
+                        c_new.pop("pages", None)
                         if g.cross and mode == "decode":
                             c_new["xk"], c_new["xv"] = c_l["xk"], c_l["xv"]
                     ys = pack_new(c_new, m_new)
@@ -462,6 +468,7 @@ class Model:
                 if g.kind != "ssm":
                     c_new = dict(c_new)
                     c_new.pop("len", None)
+                    c_new.pop("pages", None)
                     if g.cross and mode == "decode":
                         c_new["xk"], c_new["xv"] = c_l["xk"], c_l["xv"]
                 packed = pack_new(c_new, m_new)

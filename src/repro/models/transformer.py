@@ -42,9 +42,15 @@ def lora_apply(x, w, adapter: Optional[Params], bias=None):
     """y = x @ W (+ s (x A) B) (+ bias).
 
     x: (N, ..., k) or (..., k); adapter leaves rank-3 => leading client dim
-    matching x's axis 0."""
+    matching x's axis 0.  An "ids" leaf ((B,) int32) marks the serving
+    pool layout instead: rank-3 leaves are stacked (P, ...) adapters and
+    each row of x picks its own via ids (multi-adapter decode)."""
     if adapter is None:
         y = x @ w
+    elif "ids" in adapter:
+        from repro.kernels.lora_matmul import ops as lora_ops
+        y = lora_ops.lora_matmul_indexed(x, w, adapter["A"], adapter["B"],
+                                         adapter["scale"], adapter["ids"])
     elif adapter["A"].ndim == 2:
         y = common.lora_dense(x, w, None, adapter)
     else:
@@ -150,7 +156,28 @@ def attention_apply(p: Params, adapters: Optional[Params], x,
         k = common.apply_rope(k, cos, sin)
 
     new_cache = cache
-    if mode == "decode":
+    if mode == "decode" and cache is not None and "pages" in cache:
+        # paged cache (serving): pools (n_pages, ps, KVH, hd) addressed
+        # through the per-slot page table.  No client axis here.
+        assert s == 1 and len(lead) == 1
+        idx = cache["len"]                                     # (B,)
+        pages = cache["pages"]                                 # (B, Pm)
+        n_pg, ps = cache["k"].shape[0], cache["k"].shape[1]
+        trow = jnp.clip(idx // ps, 0, pages.shape[-1] - 1)
+        pg = jnp.take_along_axis(pages, trow[:, None], axis=1)[:, 0]
+        pg = jnp.clip(pg, 0, n_pg - 1)
+        off = idx % ps
+        kc = policy.cache_kv(cache["k"].at[pg, off].set(
+            k[..., 0, :, :].astype(cache["k"].dtype)))
+        vc = policy.cache_kv(cache["v"].at[pg, off].set(
+            v[..., 0, :, :].astype(cache["v"].dtype)))
+        q1 = q[..., 0, :, :]                                   # (B,H,hd)
+        o = decode_ops.decode_attention_paged(q1, kc, vc, pages, idx + 1,
+                                              window=window)
+        o = o[..., None, :, :]                                 # (B,1,H,hd)
+        new_cache = {"k": kc, "v": vc, "pages": pages,
+                     "len": cache["len"] + 1}
+    elif mode == "decode":
         assert cache is not None and s == 1
         # write the new K/V at position len, then attend over the cache
         idx = cache["len"]                                     # (B,)

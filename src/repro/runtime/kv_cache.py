@@ -1,0 +1,204 @@
+"""Paged KV cache for the serving engine.
+
+A contiguous per-slot cache reserves `max_len` positions per slot even
+when a request generates ten tokens.  The paged layout carves the cache
+into fixed-size pages held in one shared pool per layer group:
+
+    cache = {"len":   (B,) int32                    tokens written per slot
+             "pages": (B, P_max) int32              per-slot page table
+             group:   {"k": (Lg, n_pages, ps, KVH, hd), "v": ...}}
+
+Page table entry p of a slot names the pool page holding positions
+[p*ps, (p+1)*ps).  Page 0 is a reserved *trash* page: it is never
+allocated, freed slots point their whole table at it, and the decode
+kernel's scalar-prefetch index map can therefore always dereference any
+table entry (garbage entries are masked by cache_len, never by bounds
+checks inside the kernel).
+
+The page table is shared across layers — every layer's pool has the same
+page structure, so one (B, P_max) table addresses all of them.  This is
+what keeps paging a *data* change: the model threads `pages` through the
+cache pytree untouched and the per-layer pools ride the same leading-Lg
+scan slicing as the contiguous cache.
+
+Allocation is host-side (PageAllocator free list): the jitted decode tick
+never allocates — admission installs a prefilled slot with its pages
+already assigned, so the tick stays a single traced executable.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+TRASH_PAGE = 0
+
+
+def pages_per_slot(max_len: int, page_size: int) -> int:
+    return math.ceil(max_len / page_size)
+
+
+def default_num_pages(batch: int, max_len: int, page_size: int) -> int:
+    """Enough pages for every slot at full length, plus the trash page."""
+    return 1 + batch * pages_per_slot(max_len, page_size)
+
+
+def init_paged_cache(model, batch: int, max_len: int, page_size: int,
+                     dtype=jnp.float32, *, num_pages: int = 0) -> Params:
+    """Build the paged cache pytree for `model` (attention groups only).
+
+    The per-group pools mirror model.init_cache's (Lg, B, Smax, KVH, hd)
+    entries with the (B, Smax) plane replaced by (n_pages, ps)."""
+    cfg = model.cfg
+    n_pages = num_pages or default_num_pages(batch, max_len, page_size)
+    p_max = pages_per_slot(max_len, page_size)
+    cache: Params = {
+        "len": jnp.zeros((batch,), jnp.int32),
+        "pages": jnp.full((batch, p_max), TRASH_PAGE, jnp.int32),
+    }
+    for g in model.groups:
+        if g.name == "enc":
+            continue
+        if g.kind == "ssm" or g.cross:
+            raise NotImplementedError(
+                "paged serving supports self-attention caches only "
+                f"(group {g.name!r} is {g.kind}"
+                f"{', cross' if g.cross else ''})")
+        kvh, hd = cfg.num_kv_heads, cfg.head_dim
+        shape = (g.size, n_pages, page_size, kvh, hd)
+        cache[g.name] = {"k": jnp.zeros(shape, dtype),
+                        "v": jnp.zeros(shape, dtype)}
+    return cache
+
+
+class PageAllocator:
+    """Host-side free list over pool pages 1..n_pages-1 (0 is trash)."""
+
+    def __init__(self, n_pages: int):
+        self.n_pages = int(n_pages)
+        self._free: List[int] = list(range(self.n_pages - 1, 0, -1))
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"KV page pool exhausted: need {n} pages, "
+                f"{len(self._free)} free of {self.n_pages - 1}")
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: Sequence[int]):
+        for p in pages:
+            if not 0 < p < self.n_pages:
+                raise ValueError(f"freeing invalid page id {p}")
+        self._free.extend(pages)
+
+
+def page_row(pages: Sequence[int], p_max: int):
+    """Pad an allocated page list to a full (P_max,) table row (trash-page
+    padded) — built host-side at admission, written in one .at[slot].set."""
+    row = np.full((p_max,), TRASH_PAGE, np.int32)
+    row[:len(pages)] = np.asarray(pages, np.int32)
+    return row
+
+
+# -- slot install / free (jit-friendly: traced slot index, static shapes) --
+
+
+def install_slot_paged(cache: Params, slot, temp: Params, row,
+                       true_len) -> Params:
+    """Scatter a prefilled temp cache (lead (1,), length `bucket`) into the
+    paged cache at `slot`.
+
+    temp: model.init_cache((1,), bucket) after prefill — per-group k/v
+    (Lg, 1, bucket, KVH, hd) with bucket % page_size == 0.  row: (P_max,)
+    int32 page table row (`page_row` output).  The first bucket//ps entries
+    receive data; later entries (allocated for decode headroom or trash
+    padding) keep whatever the pool holds — decode writes will fill them.
+
+    Positions in [true_len, bucket) carry prefill padding garbage; they are
+    masked everywhere by cache_len = true_len."""
+    new = dict(cache)
+    ps = None
+    for gname, gc in cache.items():
+        if gname in ("len", "pages"):
+            continue
+        ps = gc["k"].shape[2]
+        bucket = temp[gname]["k"].shape[2]
+        if bucket % ps:
+            raise ValueError(
+                f"prefill bucket {bucket} not a multiple of page size {ps}")
+        n_inst = bucket // ps
+        pages = jnp.clip(row[:n_inst], 0, gc["k"].shape[1] - 1)
+        gnew = dict(gc)
+        for leaf in ("k", "v"):
+            lg = gc[leaf].shape[0]
+            kvh, hd = gc[leaf].shape[-2:]
+            tk = temp[gname][leaf].reshape(lg, n_inst, ps, kvh, hd)
+            gnew[leaf] = gc[leaf].at[:, pages].set(
+                tk.astype(gc[leaf].dtype))
+        new[gname] = gnew
+    new["pages"] = cache["pages"].at[slot].set(row.astype(jnp.int32))
+    new["len"] = cache["len"].at[slot].set(
+        jnp.asarray(true_len, jnp.int32))
+    return new
+
+
+def install_slot_contiguous(cache: Params, slot, temp: Params,
+                            true_len) -> Params:
+    """Copy a prefilled temp cache (lead (1,), length `bucket`) into slot
+    `slot` of a contiguous model.init_cache((B,), Smax) cache."""
+    new = dict(cache)
+    for gname, gc in cache.items():
+        if gname == "len":
+            continue
+        gnew = dict(gc)
+        for leaf in ("k", "v"):
+            src = temp[gname][leaf][:, 0]              # (Lg, bucket, KVH, hd)
+            gnew[leaf] = jax.lax.dynamic_update_slice(
+                gc[leaf], src[:, None].astype(gc[leaf].dtype),
+                (0, slot, 0, 0, 0))
+        new[gname] = gnew
+    new["len"] = cache["len"].at[slot].set(jnp.asarray(true_len, jnp.int32))
+    return new
+
+
+def free_slot(cache: Params, slot) -> Params:
+    """Release a slot: len -> 0, page table -> trash.  Pool pages are NOT
+    wiped — the allocator recycles them and the next install overwrites;
+    other slots' pages are untouched (bit-identity pinned by
+    tests/test_serving.py)."""
+    new = dict(cache)
+    new["len"] = cache["len"].at[slot].set(0)
+    if "pages" in cache:
+        new["pages"] = cache["pages"].at[slot].set(TRASH_PAGE)
+    return new
+
+
+def gather_contiguous(cache: Params) -> Params:
+    """Materialize the paged cache as a contiguous cache view
+    {"len", group: {"k": (Lg, B, P_max*ps, KVH, hd), ...}} — the parity
+    bridge between the paged and contiguous decode paths (tests)."""
+    out: Params = {"len": cache["len"]}
+    pt = cache["pages"]
+    for gname, gc in cache.items():
+        if gname in ("len", "pages"):
+            continue
+        n_pages = gc["k"].shape[1]
+        idx = jnp.clip(pt, 0, n_pages - 1)             # (B, P_max)
+        og = {}
+        for leaf in ("k", "v"):
+            lg, _, ps, kvh, hd = gc[leaf].shape
+            g = jnp.take(gc[leaf], idx, axis=1)        # (Lg,B,Pm,ps,KVH,hd)
+            og[leaf] = g.reshape(lg, idx.shape[0], idx.shape[1] * ps,
+                                 kvh, hd)
+        out[gname] = og
+    return out

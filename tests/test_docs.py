@@ -63,11 +63,14 @@ def test_dotted_module_references_resolve():
 
 def test_cli_flags_exist():
     """Every `--flag` the docs mention must be a real option of
-    repro.launch.train's parser (or benchmarks.run's --dry-run)."""
-    from repro.launch.train import build_parser
+    repro.launch.train's or repro.launch.serve's parser (or
+    benchmarks.run's --dry-run)."""
+    from repro.launch.serve import build_parser as serve_parser
+    from repro.launch.train import build_parser as train_parser
     known = {"--dry-run"}
-    for act in build_parser()._actions:
-        known.update(act.option_strings)
+    for parser in (train_parser(), serve_parser()):
+        for act in parser._actions:
+            known.update(act.option_strings)
     flags = set(re.findall(r"(?<![\w-])--[a-z][a-z0-9-]*", _text()))
     unknown = sorted(flags - known)
     assert not unknown, f"docs mention unknown CLI flags: {unknown}"

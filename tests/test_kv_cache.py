@@ -1,0 +1,239 @@
+"""Paged KV cache correctness.
+
+Two layers of parity:
+
+  * cache level — a full prefill+decode generation through the paged
+    cache produces the same logits, step for step, as the same requests
+    through the contiguous cache (page indirection is invisible);
+  * kernel level — decode_attention_paged matches the jnp oracle, and the
+    edge cases (cache_len=0, exactly-full cache, window > cache_len,
+    garbage page-table entries) hold on the explicit interpret-mode
+    Pallas kernel so the kernels-interpret CI lane pins them too.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import reduced
+from repro.configs import get_config
+from repro.kernels.decode_attention import kernel as dk
+from repro.kernels.decode_attention import ops as dops
+from repro.kernels.decode_attention import ref as dref
+from repro.models.model import build_model
+from repro.runtime import kv_cache, serving
+
+
+@pytest.fixture(scope="module")
+def setup():
+    arch = reduced(get_config("gpt2-small"), d_model=32, vocab=256,
+                   seq_len=16)
+    model = build_model(arch)
+    params = model.init_params(jax.random.PRNGKey(0))
+    pool = serving.build_adapter_pool(model, jax.random.PRNGKey(1), 2)
+    return model, params, pool
+
+
+# ---------------------------------------------------------------------------
+# Cache level: paged == contiguous logits over a full generate
+
+
+def test_paged_matches_contiguous_full_generate(setup):
+    model, params, pool = setup
+    ps, max_len, b = 8, 24, 2
+    rng = np.random.default_rng(0)
+    plens = [5, 11]
+    prompts = [rng.integers(3, 250, size=pl) for pl in plens]
+    ids = jnp.asarray([0, 1], jnp.int32)
+    adapters = serving.attach_ids(pool, ids)
+
+    cache_c = model.init_cache((b,), max_len)
+    cache_p = kv_cache.init_paged_cache(model, b, max_len, ps)
+    alloc = kv_cache.PageAllocator(kv_cache.default_num_pages(b, max_len,
+                                                              ps))
+    p_max = kv_cache.pages_per_slot(max_len, ps)
+
+    for slot, (pl, prompt) in enumerate(zip(plens, prompts)):
+        bucket = ps * ((pl + ps - 1) // ps)     # page-aligned prefill
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :pl] = prompt
+        ad1 = serving.attach_ids(pool, ids[slot:slot + 1])
+        temp = model.init_cache((1,), bucket)
+        _, _, temp = model.forward(params, ad1, {"tokens": jnp.asarray(toks)},
+                                   cache=temp, mode="prefill")
+        cache_c = kv_cache.install_slot_contiguous(cache_c, slot, temp, pl)
+        row = jnp.asarray(kv_cache.page_row(alloc.alloc(bucket // ps),
+                                            p_max))
+        cache_p = kv_cache.install_slot_paged(cache_p, slot, temp, row, pl)
+
+    # the paged pool, gathered through its page tables, holds the exact
+    # prefix the contiguous cache holds
+    view = kv_cache.gather_contiguous(cache_p)
+    np.testing.assert_array_equal(np.asarray(view["len"]),
+                                  np.asarray(cache_c["len"]))
+    for g in view:
+        if g == "len":
+            continue
+        for leaf in ("k", "v"):
+            for slot, pl in enumerate(plens):
+                np.testing.assert_allclose(
+                    np.asarray(view[g][leaf][:, slot, :pl]),
+                    np.asarray(cache_c[g][leaf][:, slot, :pl]),
+                    rtol=1e-6, atol=1e-6)
+
+    toks = jnp.asarray([[7], [9]], jnp.int32)
+    for _ in range(5):
+        logits_c, cache_c = model.decode_step(params, adapters, toks,
+                                              cache_c)
+        logits_p, cache_p = model.decode_step(params, adapters, toks,
+                                              cache_p)
+        np.testing.assert_allclose(np.asarray(logits_p),
+                                   np.asarray(logits_c),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_array_equal(np.asarray(cache_p["len"]),
+                                      np.asarray(cache_c["len"]))
+        toks = jnp.argmax(logits_c[:, -1:, :], -1).astype(jnp.int32)
+
+
+def test_allocator_exhaustion_and_free():
+    alloc = kv_cache.PageAllocator(6)           # pages 1..5 usable
+    a = alloc.alloc(3)
+    b = alloc.alloc(2)
+    assert sorted(a + b) == [1, 2, 3, 4, 5] and alloc.available == 0
+    with pytest.raises(RuntimeError, match="exhausted"):
+        alloc.alloc(1)
+    alloc.free(b)
+    assert alloc.available == 2
+    assert sorted(alloc.alloc(2)) == sorted(b)
+    with pytest.raises(ValueError):
+        alloc.free([kv_cache.TRASH_PAGE])       # trash page never enters
+    with pytest.raises(ValueError):
+        alloc.free([6])
+
+
+def test_init_paged_cache_rejects_non_attention():
+    class G:
+        name, kind, cross, size = "ssm0", "ssm", False, 2
+
+    class M:
+        cfg = build_model(reduced(get_config("gpt2-small"))).cfg
+        groups = [G()]
+
+    with pytest.raises(NotImplementedError, match="self-attention"):
+        kv_cache.init_paged_cache(M(), 2, 16, 8)
+
+
+# ---------------------------------------------------------------------------
+# Kernel level: paged decode attention vs the jnp oracle
+#
+# Explicit interpret=True calls — these exercise the Pallas kernel on CPU
+# regardless of the ambient dispatch, so both the tier-1 and the
+# kernels-interpret lanes pin the same kernel behavior.
+
+
+def _pools(seed, n_pages=7, ps=8, kvh=2, hd=16, b=3):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    k_pool = jax.random.normal(ks[0], (n_pages, ps, kvh, hd))
+    v_pool = jax.random.normal(ks[1], (n_pages, ps, kvh, hd))
+    q = jax.random.normal(ks[2], (b, 2 * kvh, hd))
+    pt = jnp.asarray([[1, 2], [3, 4], [5, 6]], jnp.int32)
+    return q, k_pool, v_pool, pt
+
+
+def test_paged_kernel_matches_oracle():
+    q, k_pool, v_pool, pt = _pools(1)
+    clen = jnp.asarray([3, 9, 16], jnp.int32)   # partial / mid / full
+    want = dref.decode_attention_paged(q, k_pool, v_pool, pt, clen)
+    got = dk.decode_attention_paged_pallas(q, k_pool, v_pool, pt, clen,
+                                           interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_kernel_cache_len_zero():
+    """cache_len=0 (idle slot): the kernel returns zeros; the oracle's
+    softmax over an all-masked row is NaN.  The engine never reads an
+    idle slot's output, but the kernel contract is 'finite zeros', which
+    keeps any accidental read harmless."""
+    q, k_pool, v_pool, pt = _pools(2)
+    clen = jnp.asarray([0, 5, 0], jnp.int32)
+    got = dk.decode_attention_paged_pallas(q, k_pool, v_pool, pt, clen,
+                                           interpret=True)
+    np.testing.assert_array_equal(np.asarray(got[0]),
+                                  np.zeros_like(got[0]))
+    np.testing.assert_array_equal(np.asarray(got[2]),
+                                  np.zeros_like(got[2]))
+    want = dref.decode_attention_paged(q, k_pool, v_pool, pt, clen)
+    assert np.isnan(np.asarray(want[0])).all()      # documented contrast
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                               rtol=2e-5, atol=2e-5)
+    # dense (contiguous) kernel honors the same zero contract
+    k = jnp.take(k_pool, pt[0], axis=0).reshape(1, -1, *k_pool.shape[2:])
+    v = jnp.take(v_pool, pt[0], axis=0).reshape(1, -1, *v_pool.shape[2:])
+    got_d = dk.decode_attention_pallas(q[:1], k, v,
+                                       jnp.asarray([0], jnp.int32),
+                                       interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_d),
+                                  np.zeros_like(got_d))
+
+
+def test_paged_kernel_exactly_full_cache():
+    q, k_pool, v_pool, pt = _pools(3)
+    full = pt.shape[1] * k_pool.shape[1]            # every position valid
+    clen = jnp.full((q.shape[0],), full, jnp.int32)
+    want = dref.decode_attention_paged(q, k_pool, v_pool, pt, clen)
+    got = dk.decode_attention_paged_pallas(q, k_pool, v_pool, pt, clen,
+                                           interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_kernel_window_beyond_cache_len():
+    """A sliding window larger than the cache prefix degrades to the
+    unwindowed result — the window mask can never unmask garbage."""
+    q, k_pool, v_pool, pt = _pools(4)
+    clen = jnp.asarray([5, 2, 11], jnp.int32)
+    got_w = dk.decode_attention_paged_pallas(q, k_pool, v_pool, pt, clen,
+                                             window=32, interpret=True)
+    got = dk.decode_attention_paged_pallas(q, k_pool, v_pool, pt, clen,
+                                           interpret=True)
+    np.testing.assert_allclose(np.asarray(got_w), np.asarray(got),
+                               rtol=2e-5, atol=2e-5)
+    want = dref.decode_attention_paged(q, k_pool, v_pool, pt, clen,
+                                       window=32)
+    np.testing.assert_allclose(np.asarray(got_w), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    # a window that actually bites must match the oracle too
+    got_n = dk.decode_attention_paged_pallas(q, k_pool, v_pool, pt, clen,
+                                             window=4, interpret=True)
+    want_n = dref.decode_attention_paged(q, k_pool, v_pool, pt, clen,
+                                         window=4)
+    np.testing.assert_allclose(np.asarray(got_n), np.asarray(want_n),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_garbage_table_entries_are_masked():
+    """Table entries beyond the cache_len prefix may be trash (freed
+    slots) or out of range — cache_len masks them; out-of-range ids are
+    clipped before indexing, never read meaningfully."""
+    q, k_pool, v_pool, pt = _pools(5)
+    clen = jnp.asarray([6, 8, 3], jnp.int32)        # prefix fits page 0 of
+    base = dops.decode_attention_paged(q, k_pool, v_pool, pt, clen)
+    trash = pt.at[:, 1].set(jnp.asarray([0, 9999, -3]))
+    got = dops.decode_attention_paged(q, k_pool, v_pool, trash, clen)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ops_dispatch_paged_matches_ref():
+    """Ambient ops-level entry point: oracle on plain CPU, Pallas
+    interpret under REPRO_PALLAS_INTERPRET=1 — identical numbers either
+    way (modulo the cache_len=0 contract above)."""
+    q, k_pool, v_pool, pt = _pools(6)
+    clen = jnp.asarray([4, 12, 7], jnp.int32)
+    got = dops.decode_attention_paged(q, k_pool, v_pool, pt, clen)
+    want = dref.decode_attention_paged(q, k_pool, v_pool, pt, clen)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
