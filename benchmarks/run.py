@@ -31,6 +31,7 @@ BENCHES = [
     "bench_compression",    # beyond paper (adapter channel)
     "bench_smashed",        # beyond paper (smashed f2/f4 channel)
     "bench_scheduler",      # beyond paper (round schedulers, time-to-loss)
+    "bench_traces",         # beyond paper (non-stationary heterogeneity)
     "bench_fleet",          # beyond paper (population sweep + two-tier agg)
     "bench_serve",          # beyond paper (multi-adapter serving engine)
     "bench_roofline",       # §Roofline summary

@@ -79,16 +79,30 @@ def round_comm_bytes(model: Model, *, cuts: Sequence[int], batch_size: int,
             flat_dims[fid] = per_rank
 
     rank_cut = None if rank_cut is None else np.asarray(rank_cut, int)
-    adapter_up = np.zeros(n, np.float64)
-    for i, cut in enumerate(cuts):
-        total = 0.0
-        for l in range(cut):
-            per_rank = flat_dims.get(l, 0)
-            r = lora.rank_for_layer(l, cut)
-            if rank_cut is not None and l == cut - 1:
-                r = int(rank_cut[i])
-            total += r * per_rank
-        adapter_up[i] = total * dtype_bytes * compress_ratio
+    # Adapter-channel bytes, vectorized over clients.  This runs on the
+    # host every round AND once per co-controller candidate, so the old
+    # O(N*L) Python loop bites at fleet scale.  Below a client's cut the
+    # rank policy is r_others everywhere except the cut layer itself
+    # (l == cut-1), so per-client totals decompose into an interior
+    # prefix sum plus one rank-at-cut term:
+    #   total_i = prefix[cut_i - 1] + r_last_i * per_rank[cut_i - 1]
+    # Every term is an exact small integer in float64, so the prefix
+    # cumsum reproduces the sequential loop bitwise (test-pinned).
+    L = int(cuts.max()) if n else 0
+    per_rank_vec = np.array([float(flat_dims.get(l, 0)) for l in range(L)],
+                            np.float64)
+    rank_tbl = np.array([float(lora.rank_for_layer(l, L + 2))
+                         for l in range(L)], np.float64)
+    prefix = np.concatenate(([0.0], np.cumsum(rank_tbl * per_rank_vec)))
+    if L:
+        last = np.maximum(cuts - 1, 0)
+        r_last = (np.full(n, float(lora.r_cut), np.float64)
+                  if rank_cut is None else rank_cut.astype(np.float64))
+        totals = (prefix[last] + r_last * per_rank_vec[last]) \
+            * (cuts > 0)
+    else:
+        totals = np.zeros(n, np.float64)
+    adapter_up = totals * dtype_bytes * compress_ratio
     adapter_down = adapter_up.copy()
 
     return {

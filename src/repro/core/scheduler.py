@@ -130,16 +130,32 @@ def _barrier_time(active: np.ndarray, times: Optional[np.ndarray]) -> float:
     return float(sel.max()) if sel.size else 0.0
 
 
+def _apply_available(act: np.ndarray, available) -> np.ndarray:
+    """Intersect pool membership with the trace's availability mask (a
+    diurnal/churn trace gates who can even take a round).  None — or an
+    all-ones mask — leaves `act` bitwise unchanged (x * 1.0 identity),
+    which is the constant-trace == stationary pin."""
+    if available is None:
+        return act
+    return act * np.asarray(available, np.float64)
+
+
 class RoundScheduler:
-    """Base policy: synchronous lockstep (paper Algorithm 1)."""
+    """Base policy: synchronous lockstep (paper Algorithm 1).
+
+    plan(available=...) is the trace-driven availability mask
+    (runtime/traces.py): barrier schedulers treat an unavailable client
+    exactly like a pool-inactive one for this round — no step, no
+    FedAvg share, and it cannot set the barrier time."""
 
     name = "sync"
     max_steps = 1          # static K cap: the engine's inner-scan length
     needs_speed = False    # whether plan() requires round-time estimates
 
     def plan(self, *, active, times=None, phases=None,
-             round_idx: int = 0) -> RoundPlan:
-        act = np.asarray(active, np.float64).copy()
+             round_idx: int = 0, available=None) -> RoundPlan:
+        act = _apply_available(np.asarray(active, np.float64).copy(),
+                               available)
         budgets = np.where(act > 0, 1, 0).astype(np.int64)
         return RoundPlan(active=act, step_budgets=budgets,
                          sim_time=_barrier_time(act, times), times=times,
@@ -163,11 +179,12 @@ class DeadlineScheduler(RoundScheduler):
         self.deadline_frac = deadline_frac
 
     def plan(self, *, active, times=None, phases=None,
-             round_idx: int = 0) -> RoundPlan:
+             round_idx: int = 0, available=None) -> RoundPlan:
         if times is None:
             raise ValueError("deadline scheduler needs round-time "
                              "estimates (a SpeedModel)")
-        act = np.asarray(active, np.float64).copy()
+        act = _apply_available(np.asarray(active, np.float64).copy(),
+                               available)
         surv, deadline = deadline_survivors(
             np.asarray(times, np.float64),
             deadline_frac=self.deadline_frac, active=act)
@@ -203,11 +220,12 @@ class LocalStepsScheduler(RoundScheduler):
         self.overlap = overlap
 
     def plan(self, *, active, times=None, phases=None,
-             round_idx: int = 0) -> RoundPlan:
+             round_idx: int = 0, available=None) -> RoundPlan:
         if times is None:
             raise ValueError("local_steps scheduler needs round-time "
                              "estimates (a SpeedModel)")
-        act = np.asarray(active, np.float64).copy()
+        act = _apply_available(np.asarray(active, np.float64).copy(),
+                               available)
         t = np.asarray(times, np.float64)
         overlapped = self.overlap and phases is not None
         if overlapped:
@@ -400,10 +418,12 @@ class AsyncScheduler(RoundScheduler):
         self.eu[i] = self.es[i] = self.ed[i] = self.ea[i] = now
 
     def plan(self, *, active, times=None, phases=None,
-             round_idx: int = 0) -> RoundPlan:
+             round_idx: int = 0, available=None) -> RoundPlan:
         raise NotImplementedError(
             "the async scheduler has no per-round barrier plan; "
-            "SplitFTSystem drives it through the event-queue host loop")
+            "SplitFTSystem drives it through the event-queue host loop "
+            "(trace availability defers each LAUNCH to the client's "
+            "next-available instant instead of masking rounds)")
 
     # -- checkpoint round-trip ------------------------------------------
     def state_dict(self) -> Dict:

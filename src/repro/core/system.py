@@ -73,6 +73,7 @@ from repro.data.tokenizer import HashTokenizer
 from repro.models.common import NO_SHARDING
 from repro.models.model import Model, build_model
 from repro.runtime import straggler
+from repro.runtime import traces as traces_lib
 from repro.runtime.elastic import ClientPool
 from repro.runtime.population import CohortSampler, PopulationStore
 from repro.runtime.straggler import SpeedModel
@@ -145,6 +146,14 @@ class SystemConfig:
                                                 # smashed_compress)
     acc_dead_band: Optional[float] = None  # None -> arch.split
     min_gain: Optional[float] = None       # None -> arch.split
+    trace: Optional[str] = None        # replay a recorded heterogeneity
+                                       # trace file (runtime/traces.py
+                                       # JSON format); implies a
+                                       # SpeedModel
+    trace_gen: Optional[str] = None    # synthetic trace spec, e.g.
+                                       # "diurnal:amp=0.8+markov"
+                                       # (traces.make_trace_gen);
+                                       # mutually exclusive with trace
 
 
 class SplitFTSystem:
@@ -244,10 +253,21 @@ class SplitFTSystem:
                     if getattr(self.sys, k) is not None}
         # the co-controller prices candidates with SpeedModel.phase_times,
         # so it always carries a speed model
+        if self.sys.trace and self.sys.trace_gen:
+            raise ValueError("set --trace (replay a recorded file) or "
+                             "--trace-gen (synthetic generator), not "
+                             "both")
         self.speed = (SpeedModel(n, seed=seed, **speed_kw)
                       if (self.sys.straggler_sim
                           or self.scheduler.needs_speed
-                          or self.controller == "co") else None)
+                          or self.controller == "co"
+                          or self.sys.trace or self.sys.trace_gen)
+                      else None)
+        if self.sys.trace:
+            self.speed.trace = traces_lib.load_trace(self.sys.trace)
+        elif self.sys.trace_gen:
+            self.speed.trace = traces_lib.make_trace_gen(
+                self.sys.trace_gen, seed=seed)
         self.sim_clock = 0.0           # cumulative simulated seconds
 
         # ---- model/state (engine) ----
@@ -424,9 +444,13 @@ class SplitFTSystem:
         self.sample_counts = np.array([l.num_samples()
                                        for l in self.loaders], float)
         if self.speed is not None:
-            sp, bw = self.store.speed_draws(pids)
+            sp, bw, js = self.store.speed_draws(pids)
             self.speed.speed = np.asarray(sp)
             self.speed.bandwidth = np.asarray(bw)
+            # pid-keyed jitter + trace series: both are attributes of
+            # the CLIENT, so they must follow the pid into its slot
+            self.speed.jitter_seeds = np.asarray(js, np.int64)
+            self.speed.trace_pids = pids.copy()
         self._comm_cache = None
         self._times_cache.clear()
         self._cohort_scattered = False
@@ -529,12 +553,16 @@ class SplitFTSystem:
 
     def _round_phases(self, r: int, cuts_np: np.ndarray,
                       cb: Dict[str, np.ndarray], *,
-                      jitter: bool = True) -> Optional[np.ndarray]:
+                      jitter: bool = True,
+                      start_time: Optional[float] = None
+                      ) -> Optional[np.ndarray]:
         """(5, N) per-phase durations of one local step (or None without
         a speed model): comm.py's per-channel byte split maps straight
         onto the wire phases (smashed -> f2/f4, adapter -> sync).
         jitter=False gives the EXPECTED durations — the co-controller's
-        pricing view of the exact same clock."""
+        pricing view of the exact same clock.  start_time positions the
+        launch on the simulated clock for trace-driven heterogeneity
+        (None = now, i.e. self.sim_clock)."""
         if self.speed is None:
             return None
         ea = (np.asarray(self.state["edge_assign"])
@@ -547,7 +575,9 @@ class SplitFTSystem:
             adapter_bytes=cb["adapter_up"], round_idx=r,
             server_layers=self.model.num_flat_layers - cuts_np,
             edge_assign=ea, num_edges=self.num_edges,
-            jitter=jitter)
+            jitter=jitter,
+            start_time=(self.sim_clock if start_time is None
+                        else start_time))
 
     def predict_round_times(self, r: int, cuts, rank_cut=None,
                             comp_idx=None) -> np.ndarray:
@@ -556,9 +586,13 @@ class SplitFTSystem:
         co-controller's objective.  Delegates to the SAME
         comm.round_comm_bytes + SpeedModel.phase_times the simulated
         clock charges, minus the jitter draw, so with jitter_sigma == 0
-        prediction and simulation coincide exactly.  Serial phase sum;
-        under overlap_comm, the steady-state per-step time of the
-        double-buffered pipeline (makespan of K steps / K)."""
+        prediction and simulation coincide exactly.  Under a trace the
+        candidate is priced at the CURRENT trace window (phase_times
+        defaults start_time to self.sim_clock) — the controller must
+        answer "what would this assignment cost *now*", not under the
+        stationary mean.  Serial phase sum; under overlap_comm, the
+        steady-state per-step time of the double-buffered pipeline
+        (makespan of K steps / K)."""
         cuts_np = np.asarray(cuts, int)
         cb = self._round_comm(
             cuts_np,
@@ -571,8 +605,30 @@ class SplitFTSystem:
             return straggler.pipelined_makespan(phases, steps) / k
         return straggler.serial_step_times(phases)
 
+    def _trace_availability(self) -> Optional[np.ndarray]:
+        """Barrier rounds under a trace: the availability mask at the
+        round's start.  If NO pool-active client is available the round
+        cannot form — the fleet idles, so the simulated clock advances
+        to the earliest next-available instant (exactly what a real
+        orchestrator does).  Past the trace's scan horizon we fall back
+        to everyone-available rather than deadlocking the simulation."""
+        if self.speed is None or self.speed.trace is None:
+            return None
+        act = np.asarray(self.pool.active, bool)
+        avail = self.speed.available_mask(self.sim_clock)
+        if act.any() and not (act & avail).any():
+            t = min(self.speed.next_available(int(i), self.sim_clock)
+                    for i in np.flatnonzero(act))
+            if t > self.sim_clock:
+                self.sim_clock = float(t)
+                avail = self.speed.available_mask(self.sim_clock)
+            if not (act & avail).any():
+                avail = np.ones_like(avail)
+        return avail.astype(np.float64)
+
     def _plan_round(self, r: int):
         """One scheduler decision: (RoundPlan, comm-bytes dict)."""
+        avail = self._trace_availability()   # may advance sim_clock
         cuts_np = np.asarray(self.state["cuts"])
         rank_np, choice_np = self._state_policy()
         cb = self._round_comm(cuts_np, rank_np, choice_np)
@@ -581,7 +637,7 @@ class SplitFTSystem:
                  else straggler.serial_step_times(phases))
         plan = self.scheduler.plan(
             active=self.pool.active.astype(np.float64), times=times,
-            phases=phases, round_idx=r)
+            phases=phases, round_idx=r, available=avail)
         return plan, cb
 
     def _round_record(self, r: int, metrics, plan: RoundPlan,
@@ -748,27 +804,37 @@ class SplitFTSystem:
         return self._comm_cache[1]
 
     def _cached_phases(self, round_idx: int, cuts_np: np.ndarray,
-                       cb: Dict[str, np.ndarray]) -> np.ndarray:
-        """_round_phases memo keyed by (launch index, cuts + controller
-        policy): relaunching clients at the same launch share one
-        full-fleet draw instead of re-drawing the whole lognormal vector
-        per client."""
+                       cb: Dict[str, np.ndarray],
+                       start_time: Optional[float] = None) -> np.ndarray:
+        """_round_phases memo keyed by (launch index, trace window, cuts
+        + controller policy): relaunching clients at the same launch
+        share one full-fleet draw instead of re-drawing the whole
+        lognormal vector per client.  Traces are piecewise-constant per
+        window, so keying by `trace.window(start)` keeps the memo exact
+        under a non-stationary clock (and collapses to one window —
+        key None/0 — without a trace)."""
         rank_np, choice_np = self._state_policy()
-        key = (round_idx, cuts_np.tobytes(),
+        start = self.sim_clock if start_time is None else start_time
+        trace = None if self.speed is None else self.speed.trace
+        win = None if trace is None else trace.window(start)
+        key = (round_idx, win, cuts_np.tobytes(),
                None if rank_np is None else rank_np.tobytes(),
                None if choice_np is None else choice_np.tobytes())
         p = self._times_cache.get(key)
         if p is None:
             if len(self._times_cache) > 64:   # launches only grow; old
                 self._times_cache.clear()     # entries never recur
-            p = self._round_phases(round_idx, cuts_np, cb)
+            p = self._round_phases(round_idx, cuts_np, cb,
+                                   start_time=start)
             self._times_cache[key] = p
         return p
 
     def _serial_time(self, i: int, launch: int, cuts_np: np.ndarray,
-                     cb: Dict[str, np.ndarray]) -> float:
-        """Client i's serial one-step time at a launch index."""
-        ph = self._cached_phases(launch, cuts_np, cb)
+                     cb: Dict[str, np.ndarray],
+                     start_time: Optional[float] = None) -> float:
+        """Client i's serial one-step time at a launch index (priced at
+        `start_time` on the simulated clock; None = now)."""
+        ph = self._cached_phases(launch, cuts_np, cb, start_time)
         return float(straggler.serial_step_times(ph)[i])
 
     # -- overlap pipeline (double-buffered phase events) ----------------
@@ -787,9 +853,13 @@ class SplitFTSystem:
         k = int(sched.csched[i])
         if int(sched.launches[i]) < k - 1:
             return                 # step k-2 has not fully completed
-        ph = self._cached_phases(k, cuts_np, cb)
-        sched.queue.push((i, "client_compute", k),
-                         sched.queue.now + float(ph[0, i]))
+        # trace availability defers the launch to the client's next
+        # available instant (no trace / constant trace: t0 == now, and
+        # max(t, t) == t keeps the clock bitwise)
+        t0 = max(sched.queue.now, self.speed.next_available(
+            i, sched.queue.now))
+        ph = self._cached_phases(k, cuts_np, cb, t0)
+        sched.queue.push((i, "client_compute", k), t0 + float(ph[0, i]))
         sched.csched[i] += 1
 
     def _overlap_advance(self, i: int, phase: str, k: int, t_now: float,
@@ -805,7 +875,7 @@ class SplitFTSystem:
         phase."""
         sched = self.scheduler
         q = sched.queue
-        ph = self._cached_phases(k, cuts_np, cb)
+        ph = self._cached_phases(k, cuts_np, cb, t_now)
         if phase == "client_compute":
             sched.cfin[i] += 1
             start = max(t_now, float(sched.eu[i]))
@@ -839,9 +909,14 @@ class SplitFTSystem:
             self._overlap_try_compute(i, cuts_np, cb)
         else:
             launch = int(sched.launches[i])
-            t_i = self._serial_time(i, launch, cuts_np, cb)
+            # trace availability: an unavailable client launches at its
+            # next available instant instead of now (max(t, t) == t
+            # keeps the no-trace / constant-trace clock bitwise)
+            t0 = max(sched.queue.now, self.speed.next_available(
+                i, sched.queue.now))
+            t_i = self._serial_time(i, launch, cuts_np, cb, t0)
             sched.queue.push((i, scheduler_lib.PHASE_STEP, launch),
-                             sched.queue.now + t_i)
+                             t0 + t_i)
 
     def _async_ensure_started(self):
         """Launch every ACTIVE client's first local round onto the event
@@ -945,7 +1020,7 @@ class SplitFTSystem:
             # actually experienced at ITS launch index — not a fresh
             # full-fleet draw at the aggregation-round index
             sched.last_times[i] = self._serial_time(
-                i, int(sched.launches[i]), cuts_np, cb)
+                i, int(sched.launches[i]), cuts_np, cb, t_now)
             sched.launches[i] += 1
         if aggregated:
             # this tick's finishers just received the new global model;
@@ -1097,6 +1172,12 @@ class SplitFTSystem:
             # restored cohort cursors — launch counters live in the
             # store's slots.)
             meta["async_sim"] = self.scheduler.state_dict()
+        if self.speed is not None and self.speed.trace is not None:
+            # trace cursor (e.g. the Markov availability chain's per-pid
+            # position): every trace value is a pure function of (pid,
+            # window), so the cursor is only a cache — but restoring it
+            # spares the resumed run an O(t/step) replay on first query
+            meta["trace"] = self.speed.trace.state_dict()
         if self.store is not None:
             # cohort rows back to their slots first so the slot map is
             # the single source of per-pid truth in the checkpoint
@@ -1184,6 +1265,9 @@ class SplitFTSystem:
         self.sim_clock = float(meta.get("sim_clock", 0.0))
         if self.scheduler.name == "async" and self.store is None:
             self.scheduler.load_state_dict(meta.get("async_sim") or {})
+        if self.speed is not None and self.speed.trace is not None \
+                and meta.get("trace") is not None:
+            self.speed.trace.load_state_dict(meta["trace"])
         return True
 
     # ------------------------------------------------------------------

@@ -107,6 +107,17 @@ def build_parser() -> argparse.ArgumentParser:
                          "improvement required before moving a "
                          "client's triple (hysteresis)")
     ap.add_argument("--straggler-sim", action="store_true")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="replay a recorded heterogeneity trace file "
+                         "(runtime.traces JSON: per-window speed/"
+                         "bandwidth/availability factors); implies a "
+                         "simulated-clock speed model")
+    ap.add_argument("--trace-gen", default=None, metavar="SPEC",
+                    help="synthetic heterogeneity trace, e.g. "
+                         "'diurnal:amp=0.8,period=900+markov:p_down="
+                         "0.05,p_up=0.3+cells:k=4+thermal:floor=0.5' "
+                         "(runtime.traces.make_trace_gen; mutually "
+                         "exclusive with --trace)")
     ap.add_argument("--population", type=int, default=None,
                     help="fleet-scale mode: total client population; "
                          "each round a seeded cohort of --cohort-size "
@@ -178,6 +189,8 @@ def main(argv=None):
         acc_dead_band=args.acc_dead_band,
         min_gain=args.min_gain,
         straggler_sim=args.straggler_sim,
+        trace=args.trace,
+        trace_gen=args.trace_gen,
         population=args.population,
         edge_groups=args.edge_groups,
         checkpoint_dir=os.path.join(args.out, "ckpt"),

@@ -8,6 +8,10 @@ from repro.runtime.straggler import (  # noqa: F401
     population_speed_draws, serial_step_times,
 )
 from repro.runtime.elastic import ClientPool  # noqa: F401
+from repro.runtime.traces import (  # noqa: F401
+    ConstantTrace, FileTrace, SyntheticTrace, Trace, load_trace,
+    make_trace_gen,
+)
 from repro.runtime.population import (  # noqa: F401
     CohortSampler, PopulationStore,
 )

@@ -170,7 +170,7 @@ class PopulationStore:
     def _materialize(self, pid: int) -> Dict[str, Any]:
         slot = self._slots.get(pid)
         if slot is None:
-            speed, bw = population_speed_draws(
+            speed, bw, jseed = population_speed_draws(
                 [pid], seed=self.seed, speed_sigma=self.speed_sigma,
                 bw_mean=self.bw_mean, bw_sigma=self.bw_sigma)
             slot = {
@@ -180,6 +180,7 @@ class PopulationStore:
                 "c3": 1.0,
                 "speed": float(speed[0]),
                 "bw": float(bw[0]),
+                "jseed": int(jseed[0]),
             }
             self._slots[pid] = slot
         return slot
@@ -243,19 +244,24 @@ class PopulationStore:
                          for p in pids], np.float64)
 
     def speed_draws(self, pids: Sequence[int]
-                    ) -> Tuple[np.ndarray, np.ndarray]:
-        """(speed, bandwidth) per pid — stable across cohort churn."""
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(speed, bandwidth, jitter seed) per pid — stable across
+        cohort churn; the jitter seeds go to SpeedModel.jitter_seeds so
+        per-round noise is pid-keyed, not slot-positional."""
         speed = np.array([self._materialize(int(p))["speed"]
                           for p in pids], np.float64)
         bw = np.array([self._materialize(int(p))["bw"]
                        for p in pids], np.float64)
-        return speed, bw
+        jseed = np.array([self._materialize(int(p))["jseed"]
+                          for p in pids], np.int64)
+        return speed, bw, jseed
 
     # -- checkpoint round-trip ------------------------------------------
     def state_tree(self) -> Params:
         """The store as a fixed-treedef pytree for checkpoint/store.py:
-        {"pids","cursors","c3","speed","bw","rows":{leafpath: (K,...)}}
-        with K = number of materialized slots.  The treedef is
+        {"pids","cursors","c3","speed","bw","jseed",
+         "rows":{leafpath: (K,...)}} with K = number of materialized
+        slots.  The treedef is
         K-independent (same keys whatever K, K = 0 included), so
         load_checkpoint's shape-donor contract works with a fresh
         store."""
@@ -277,6 +283,8 @@ class PopulationStore:
                               np.float64),
             "bw": np.array([self._slots[p]["bw"] for p in pids],
                            np.float64),
+            "jseed": np.array([self._slots[p]["jseed"] for p in pids],
+                              np.int64),
             "rows": rows,
         }
 
@@ -284,8 +292,18 @@ class PopulationStore:
         """Rebuild the slot map from state_tree() output (numpy arrays
         as loaded by checkpoint.load_checkpoint)."""
         pids = np.asarray(tree["pids"], np.int64)
+        jarr = tree.get("jseed")
         self._slots = {}
         for j, pid in enumerate(pids):
+            if jarr is not None:
+                js = int(np.asarray(jarr)[j])
+            else:
+                # pre-jseed checkpoint: the seed is a pure hash of
+                # (pid, store seed), so recomputing it is exact
+                js = int(population_speed_draws(
+                    [int(pid)], seed=self.seed,
+                    speed_sigma=self.speed_sigma, bw_mean=self.bw_mean,
+                    bw_sigma=self.bw_sigma)[2][0])
             self._slots[int(pid)] = {
                 "rows": {lp: np.array(arr[j])
                          for lp, arr in tree["rows"].items()},
@@ -293,4 +311,5 @@ class PopulationStore:
                 "c3": float(np.asarray(tree["c3"])[j]),
                 "speed": float(np.asarray(tree["speed"])[j]),
                 "bw": float(np.asarray(tree["bw"])[j]),
+                "jseed": js,
             }

@@ -75,6 +75,38 @@ class SpeedModel:
                                        self.num_clients))
         self.bandwidth = self.bw_mean * np.exp(
             rng.normal(0.0, self.bw_sigma, self.num_clients))
+        # Optional non-stationarity (runtime/traces.py): a Trace
+        # provider queried at each launch's simulated start time whose
+        # (speed, bandwidth) factors multiply the stationary draws and
+        # whose availability gates participation.  None = stationary
+        # clock, bitwise.  trace_pids maps slot i -> population id so
+        # the series survive cohort churn (fleet mode: pid == slot).
+        self.trace = None
+        self.trace_pids = None
+        # Population mode installs per-pid jitter seeds here so a pid's
+        # per-round noise is an attribute of the CLIENT, not of the
+        # cohort slot it landed in.  None = legacy positional draw.
+        self.jitter_seeds = None
+
+    def _pids(self) -> np.ndarray:
+        return (np.arange(self.num_clients)
+                if self.trace_pids is None
+                else np.asarray(self.trace_pids, np.int64))
+
+    def available_mask(self, t: float) -> np.ndarray:
+        """(N,) bool availability at simulated time t (all-true without
+        a trace)."""
+        if self.trace is None:
+            return np.ones(self.num_clients, bool)
+        return np.asarray(self.trace.sample(float(t), self._pids())[2],
+                          bool)
+
+    def next_available(self, i: int, t: float) -> float:
+        """Earliest instant >= t at which client slot i is available."""
+        if self.trace is None:
+            return float(t)
+        return float(self.trace.next_available(
+            float(t), int(self._pids()[i])))
 
     def phase_times(self, *, cuts: Sequence[int], flops_per_layer: float,
                     smashed_bytes, adapter_bytes: Sequence[float],
@@ -83,7 +115,8 @@ class SpeedModel:
                     smashed_down_bytes=None,
                     edge_assign: Optional[Sequence[int]] = None,
                     num_edges: int = 1,
-                    jitter: bool = True) -> np.ndarray:
+                    jitter: bool = True,
+                    start_time: float = 0.0) -> np.ndarray:
         """(5, N) per-client phase durations for one local step.
 
         Rows follow `PHASES`: client compute (cut_i layers of
@@ -113,23 +146,47 @@ class SpeedModel:
         group's largest member payload — plus a per-client client->edge
         hop at edge_bw.  With at least one multi-member group the
         hierarchical charge is strictly smaller; with
-        server_ingest_bw == 0 the row is the legacy clock bitwise."""
+        server_ingest_bw == 0 the row is the legacy clock bitwise.
+
+        start_time is the launch's position on the simulated clock: with
+        a `trace` provider installed the stationary (speed, bandwidth)
+        draws are multiplied by the trace's factors at that instant
+        (piecewise-constant per trace window).  Without a trace — or
+        with a constant trace of 1.0 factors — the clock is the
+        stationary model bitwise."""
         if jitter:
-            rng = np.random.RandomState(round_idx * 7919 + self.seed)
-            jit = np.exp(rng.normal(0.0, self.jitter_sigma,
-                                    self.num_clients))
+            if self.jitter_seeds is not None:
+                # pid-keyed: fold the round index into each client's own
+                # seed stream so the draw is independent of cohort slot
+                js = np.asarray(self.jitter_seeds, np.int64)
+                jit = np.empty(self.num_clients, np.float64)
+                for i in range(self.num_clients):
+                    rng = np.random.RandomState(
+                        (int(js[i]) + round_idx * 7919) & 0x7FFFFFFF)
+                    jit[i] = np.exp(self.jitter_sigma
+                                    * rng.normal(0.0, 1.0))
+            else:
+                rng = np.random.RandomState(round_idx * 7919 + self.seed)
+                jit = np.exp(rng.normal(0.0, self.jitter_sigma,
+                                        self.num_clients))
         else:
             jit = np.ones(self.num_clients)
+        speed, bandwidth = self.speed, self.bandwidth
+        if self.trace is not None:
+            tsp, tbw, _ = self.trace.sample(float(start_time),
+                                            self._pids())
+            speed = speed * tsp
+            bandwidth = bandwidth * tbw
         cuts = np.asarray(cuts, np.float64)
         client = cuts * flops_per_layer * 3.0 / \
-            (ref_flops_per_s * self.speed) * jit
+            (ref_flops_per_s * speed) * jit
         up = np.asarray(smashed_bytes, np.float64)
         down = (up if smashed_down_bytes is None
                 else np.asarray(smashed_down_bytes, np.float64))
-        f2 = up / self.bandwidth * jit
-        f4 = down / self.bandwidth * jit
+        f2 = up / bandwidth * jit
+        f4 = down / bandwidth * jit
         adapter = np.asarray(adapter_bytes, np.float64) \
-            / self.bandwidth * jit
+            / bandwidth * jit
         if self.server_ingest_bw > 0:
             ab = np.broadcast_to(
                 np.asarray(adapter_bytes, np.float64),
@@ -154,22 +211,24 @@ class SpeedModel:
     def round_times(self, *, cuts: Sequence[int], flops_per_layer: float,
                     smashed_bytes: float, adapter_bytes: Sequence[float],
                     round_idx: int = 0,
-                    ref_flops_per_s: float = 5e12) -> np.ndarray:
+                    ref_flops_per_s: float = 5e12,
+                    start_time: float = 0.0) -> np.ndarray:
         """Serial wall-clock estimate per client for one round: the
         column sum of `phase_times` (compute, then each wire phase back
         to back — no overlap)."""
         return serial_step_times(self.phase_times(
             cuts=cuts, flops_per_layer=flops_per_layer,
             smashed_bytes=smashed_bytes, adapter_bytes=adapter_bytes,
-            round_idx=round_idx, ref_flops_per_s=ref_flops_per_s))
+            round_idx=round_idx, ref_flops_per_s=ref_flops_per_s,
+            start_time=start_time))
 
 
 def population_speed_draws(pids: Sequence[int], *, seed: int = 0,
                            speed_sigma: float = 0.5,
                            bw_mean: float = 100e6,
                            bw_sigma: float = 0.7
-                           ) -> Tuple[np.ndarray, np.ndarray]:
-    """Per-POPULATION-ID (speed, bandwidth) lognormal draws.
+                           ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-POPULATION-ID (speed, bandwidth, jitter-seed) draws.
 
     SpeedModel's fleet draws are positional (client slot i), which breaks
     under cohort sampling: slot i holds a different pid every round.
@@ -177,17 +236,26 @@ def population_speed_draws(pids: Sequence[int], *, seed: int = 0,
     client's speed is a stable attribute that survives cohort churn,
     restore, and population growth (pid p draws the same pair whether the
     population is 10^3 or 10^6).  With both sigmas 0 every pid gets
-    (1.0, bw_mean), matching a sigma-0 SpeedModel exactly."""
+    (1.0, bw_mean), matching a sigma-0 SpeedModel exactly.
+
+    The third array is each pid's jitter seed: the pid-keyed stream
+    `SpeedModel.phase_times` folds the round index into (installed as
+    `SpeedModel.jitter_seeds` by the cohort loop), so per-round jitter
+    is also slot-independent.  It is a pure hash of (pid, seed) — no RNG
+    state is consumed, so the (speed, bandwidth) pairs are unchanged."""
     pids = np.asarray(pids, np.int64)
     speed = np.empty(pids.shape[0], np.float64)
     bw = np.empty(pids.shape[0], np.float64)
+    jseed = np.empty(pids.shape[0], np.int64)
     for j, pid in enumerate(pids):
         rng = np.random.RandomState(
             (int(pid) * 2654435761 + seed * 1000003 + 17) & 0x7FFFFFFF)
         z = rng.normal(0.0, 1.0, 2)
         speed[j] = np.exp(speed_sigma * z[0])
         bw[j] = bw_mean * np.exp(bw_sigma * z[1])
-    return speed, bw
+        jseed[j] = (int(pid) * 2654435761
+                    + seed * 1000003 + 9176) & 0x7FFFFFFF
+    return speed, bw, jseed
 
 
 def serial_step_times(phases: np.ndarray) -> np.ndarray:
@@ -327,5 +395,11 @@ def deadline_survivors(times: np.ndarray, *, deadline_frac: float = 1.5,
     deadline = deadline_frac * med
     mask = act & (t <= deadline)
     if not mask.any():
-        mask = act & (t == t[act].min())
+        # exactly ONE survivor, as documented: the single deterministic
+        # argmin over active clients (float-equality against the min
+        # could keep several tied clients, making the fallback round's
+        # aggregate depend on how ties happened to materialize)
+        idx = np.flatnonzero(act)
+        mask = np.zeros(t.shape, bool)
+        mask[idx[int(np.argmin(t[idx]))]] = True
     return mask, deadline

@@ -242,6 +242,48 @@ def test_comm_bytes_reflect_rank_reduction():
     assert (deep["adapter_up"] > base["adapter_up"]).all()
 
 
+def test_adapter_bytes_vectorized_matches_loop_bitwise():
+    """The vectorized adapter-channel accounting (prefix sum over the
+    interior rank table + one rank-at-cut term) must reproduce the
+    sequential per-client loop it replaced BITWISE: every term is an
+    exact small integer in float64, so cumsum == left-fold."""
+    model = small_model(6)
+    lora = model.arch.lora
+    spec = model.adapter_spec()
+    flat_dims = {}
+    for gname, targets in spec.items():
+        g = model.group_by_name[gname]
+        per_rank = sum(din + dout for din, dout in targets.values())
+        for fid in g.layer_ids:
+            flat_dims[fid] = per_rank
+
+    def loop(cuts, rank_cut=None, dtype_bytes=4, compress_ratio=1.0):
+        out = np.zeros(len(cuts), np.float64)
+        for i, cut in enumerate(cuts):
+            total = 0.0
+            for l in range(int(cut)):
+                r = lora.rank_for_layer(l, int(cut))
+                if rank_cut is not None and l == int(cut) - 1:
+                    r = int(rank_cut[i])
+                total += r * flat_dims.get(l, 0)
+            out[i] = total * dtype_bytes * compress_ratio
+        return out
+
+    cases = [
+        (np.array([2, 2, 2]), None),                    # uniform
+        (np.array([1, 3, 6, 4]), None),                 # heterogeneous
+        (np.array([0, 2, 5]), None),                    # idle client
+        (np.array([3, 3, 3]), np.array([1, 2, 8])),     # per-client rank
+        (np.array([1, 6, 0, 4]), np.array([2, 4, 8, 16])),
+    ]
+    for cuts, rk in cases:
+        got = comm.round_comm_bytes(model, cuts=cuts, batch_size=2,
+                                    seq_len=16, rank_cut=rk)
+        want = loop(cuts, rk)
+        assert np.array_equal(got["adapter_up"], want)
+        assert np.array_equal(got["adapter_down"], want)
+
+
 # ---------------------------------------------------------------------------
 # round engine
 

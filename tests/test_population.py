@@ -143,6 +143,45 @@ def test_sampler_mismatch_raises():
         CohortSampler(100, 4, seed=0).load_state_dict(s.state_dict())
 
 
+def test_pid_keyed_jitter_survives_cohort_shuffle():
+    """Regression (ISSUE 9): per-round jitter must be an attribute of
+    the CLIENT (pid), not of the cohort slot it landed in.  A shuffled
+    cohort of the same pids must charge each pid bitwise-identical
+    phase times."""
+    from repro.runtime.straggler import SpeedModel, population_speed_draws
+
+    def model_for(pids, keyed=True):
+        sm = SpeedModel(num_clients=len(pids), seed=0)
+        sp, bw, js = population_speed_draws(pids, seed=0)
+        sm.speed, sm.bandwidth = sp, bw
+        if keyed:
+            sm.jitter_seeds = np.asarray(js, np.int64)
+        return sm
+
+    def phases(sm):
+        return sm.phase_times(cuts=[2] * sm.num_clients,
+                              flops_per_layer=1e9,
+                              smashed_bytes=1e6,
+                              adapter_bytes=[1e5] * sm.num_clients,
+                              round_idx=3)
+
+    pids = [5, 6, 7]
+    perm = [2, 0, 1]                       # slot order [7, 5, 6]
+    a = phases(model_for(pids))
+    b = phases(model_for([pids[j] for j in perm]))
+    # b's slot k holds pid pids[perm[k]], which sits at slot perm[k]
+    # in a -- every pid's (5,) phase column must match bitwise
+    for k in range(3):
+        np.testing.assert_array_equal(b[:, k], a[:, perm[k]])
+    # the legacy positional draw does NOT have this property (the bug
+    # this pins): without pid-keyed seeds the shuffled cohort reassigns
+    # slot noise to different pids
+    a_pos = phases(model_for(pids, keyed=False))
+    b_pos = phases(model_for([pids[j] for j in perm], keyed=False))
+    assert any(not np.array_equal(b_pos[:, k], a_pos[:, perm[k]])
+               for k in range(3))
+
+
 # ---------------------------------------------------------------------------
 # cohort-of-everyone == fleet, bitwise
 

@@ -118,6 +118,26 @@ def test_deadline_survivors_active_unit():
     assert not m.any() and d == 0.0
 
 
+def test_deadline_fallback_tied_times_single_survivor():
+    """Regression: when nobody makes the deadline and the fastest time
+    is TIED, the fallback must keep exactly one survivor (the
+    deterministic argmin) — a float-equality mask against the min would
+    keep every tied client and the round's aggregate would depend on
+    how ties happened to materialize."""
+    from repro.runtime.straggler import deadline_survivors
+    t = np.array([5.0, 5.0, 9.0])
+    m, _ = deadline_survivors(t, deadline_frac=0.1)
+    assert m.tolist() == [True, False, False]
+    # ties among ACTIVE clients only: the inactive copy of the minimum
+    # at slot 0 must never win
+    m, _ = deadline_survivors(t, deadline_frac=0.01,
+                              active=np.array([0.0, 1.0, 1.0]))
+    assert m.tolist() == [False, True, False]
+    # an all-tied fleet still yields exactly one survivor
+    m, _ = deadline_survivors(np.full(4, 3.0), deadline_frac=0.0)
+    assert m.tolist() == [True, False, False, False]
+
+
 def test_unknown_scheduler_raises():
     with pytest.raises(ValueError):
         scheduler_lib.make_scheduler("gossip")
