@@ -72,6 +72,56 @@ def _controller_rows() -> List[dict]:
     return rows
 
 
+def _misspec_rows() -> List[dict]:
+    """ISSUE 10: the mis-specified-model lane.  Both lanes charge the
+    SAME true clock and price candidates from the SAME deliberately
+    wrong SpeedModel (drawn at model_seed != the clock's seed); only the
+    time source differs.  `analytic` trusts the wrong spec sheet
+    forever; `measured` corrects it from observed phase times (one
+    round suffices at jitter 0), so its co-controller picks triples
+    that are fast on the clock that actually bills — scored by
+    simulated time-to-target, bench_scheduler convention."""
+    arch = bench_arch(cut=2, adaptive=True, partition="iid")
+    lora = arch.lora
+    rank_buckets = tuple(sorted({max(1, lora.r_cut // 2), lora.r_cut,
+                                 min(lora.r_others, 2 * lora.r_cut)}))
+    # Compute/wire balance at any bench scale: flops/layer = 12 d^2 B S
+    # and dense smashed bytes = 4 B S d, so client_flops_per_s =
+    # 3 d bw_mean / 4 puts one layer's compute at the mean client's
+    # one-way dense wire time.  bw_sigma=2 then spreads the TRUE
+    # compute-vs-wire ratio over orders of magnitude per client while
+    # the mis-specified model (model_seed) believes a different spread —
+    # exactly the regime where the hysteresis keeps `analytic` parked on
+    # a wire-bound straggler that `measured`, corrected after one
+    # observed round, compresses past min_gain.
+    bw_mean = 1e5
+    common = dict(num_samples=SAMPLES, eval_samples=EVAL_SAMPLES,
+                  straggler_sim=True, jitter_sigma=0.0, model_seed=7,
+                  scheduler="sync", bw_mean=bw_mean, bw_sigma=2.0,
+                  client_flops_per_s=3.0 * arch.model.d_model * bw_mean
+                  / 4.0,
+                  min_gain=0.4, controller="co",
+                  rank_buckets=rank_buckets,
+                  compressor_buckets=("none", "int8", "topk"))
+    rounds = 4 if DRYRUN else ROUNDS
+    res = {src: run_experiment(arch, rounds=rounds,
+                               sys_cfg=SystemConfig(time_source=src,
+                                                    **common))
+           for src in ("analytic", "measured")}
+    target = max(float(r["history"][-1]["loss"]) for r in res.values())
+    rows = []
+    for src, r_ in res.items():
+        r = row(f"adaptive/misspec_{src}", r_)
+        r["target_loss"] = target
+        r["sim_time_to_target"] = _sim_time_to_target(r_["history"],
+                                                      target)
+        r["sim_time_total"] = float(sum(h["sim_time"]
+                                        for h in r_["history"]))
+        r["final_loss"] = float(r_["history"][-1]["loss"])
+        rows.append(r)
+    return rows
+
+
 def run() -> List[dict]:
     rows = []
     # Same-Split baseline (iid, fixed cut)
@@ -88,6 +138,7 @@ def run() -> List[dict]:
         res = run_experiment(arch)
         rows.append(row(f"adaptive/splitft_alpha={alpha}", res))
     rows.extend(_controller_rows())
+    rows.extend(_misspec_rows())
     return rows
 
 

@@ -276,6 +276,11 @@ class SplitConfig:
     min_gain: float = 0.05                   # relative predicted-makespan
                                              # improvement required to move
                                              # (co_adjust hysteresis)
+    continuous_topk: bool = False            # co: tune the topk keep
+                                             # fraction continuously
+                                             # (state["topk_frac"]);
+                                             # needs "topk" in the
+                                             # compressor buckets
     # Hierarchical (two-tier) aggregation: clients FedAvg within each of
     # edge_groups edge aggregators, then the edges FedAvg to the server.
     # 1 = flat single-tier (the paper path, bitwise).  The edge->server

@@ -114,8 +114,10 @@ def co_adjust(cuts: Sequence[int], rank_cut: Sequence[int],
               price: Callable,
               active: Optional[Sequence[float]] = None,
               dead_band: float = 0.002, min_gain: float = 0.05,
-              round_times: Optional[Sequence[float]] = None
-              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+              round_times: Optional[Sequence[float]] = None,
+              topk_frac: Optional[Sequence[float]] = None,
+              frac_bounds: Tuple[float, float] = (0.01, 1.0)
+              ) -> Tuple[np.ndarray, ...]:
     """One co-controller step over (cut, rank-at-cut, compressor).
 
     price(cuts, rank_cut, comp_idx) -> (N,) predicted per-client round
@@ -129,7 +131,19 @@ def co_adjust(cuts: Sequence[int], rank_cut: Sequence[int],
     is each client's predicted makespan under its NEW assignment.
     Inactive clients keep their triple unchanged (their prediction is
     the stay-put price).  See the module docstring for the dead-band /
-    min_gain policy."""
+    min_gain policy.
+
+    topk_frac (optional, (N,) per-client topk keep fraction) adds the
+    CONTINUOUS fourth knob: `price` must then accept a fourth
+    per-client frac argument and the return grows to (cuts', rank_cut',
+    comp_idx', topk_frac', predicted).  The fraction obeys the same
+    accuracy gating as the discrete knobs — below the dead-band the
+    fraction is forcibly DOUBLED (quality recovery: keep more signal,
+    clipped to frac_bounds); inside the band it holds; above the band a
+    halved fraction competes against the kept one under the same
+    min_gain hysteresis, after the triple has settled.  A client whose
+    chosen compressor is not topk prices identically at any fraction,
+    so the hysteresis pins its fraction in place."""
     cuts = np.asarray(cuts, int)
     rank_cut = np.asarray(rank_cut, int)
     comp_idx = np.asarray(comp_idx, int)
@@ -143,6 +157,10 @@ def co_adjust(cuts: Sequence[int], rank_cut: Sequence[int],
         raise ValueError("co_adjust needs at least one rank bucket")
     if num_compressors < 1:
         raise ValueError("co_adjust needs at least one compressor bucket")
+    frac = (None if topk_frac is None
+            else np.asarray(topk_frac, np.float64))
+    _price = (price if frac is None
+              else lambda c, rk, ci: price(c, rk, ci, frac))
     avg = accs[act].mean() if act.any() else accs.mean()
     slow = (np.zeros(n, bool) if round_times is None
             else _straggler_mask(round_times, act))
@@ -158,12 +176,14 @@ def co_adjust(cuts: Sequence[int], rank_cut: Sequence[int],
         for ri in range(len(rbuckets)):
             for ci in range(num_compressors):
                 times[(dc, ri, ci)] = np.asarray(
-                    price(cand_cuts, np.full(n, rbuckets[ri], int),
-                          np.full(n, ci, int)), np.float64)
+                    _price(cand_cuts, np.full(n, rbuckets[ri], int),
+                           np.full(n, ci, int)), np.float64)
 
     new_cuts = cuts.copy()
     new_rank = rank_cut.copy()
     new_comp = comp_idx.copy()
+    below = np.zeros(n, bool)
+    above = np.zeros(n, bool)
     predicted = np.array([times[(0, rpos[i], comp_idx[i])][i]
                           for i in range(n)])
     for i in range(n):
@@ -171,6 +191,7 @@ def co_adjust(cuts: Sequence[int], rank_cut: Sequence[int],
             continue
         t_cur = times[(0, rpos[i], comp_idx[i])][i]
         if accs[i] < avg - dead_band:
+            below[i] = True
             # forced quality recovery: never an argmin — shed layers,
             # raise rank one bucket, weaken compression one step
             dc = -2 if slow[i] else -1
@@ -183,7 +204,8 @@ def co_adjust(cuts: Sequence[int], rank_cut: Sequence[int],
             predicted[i] = times[(cp - pos[i], ri, ci)][i] \
                 if cp - pos[i] in offsets else t_cur
             continue
-        dcs = (0, 1) if accs[i] > avg + dead_band else (0,)
+        above[i] = accs[i] > avg + dead_band
+        dcs = (0, 1) if above[i] else (0,)
         # score: time first, then prefer staying put, a held cut, higher
         # rank, weaker compression — the quality-preserving tie-breaks
         best = None
@@ -207,4 +229,24 @@ def co_adjust(cuts: Sequence[int], rank_cut: Sequence[int],
         new_rank[i] = rbuckets[ri]
         new_comp[i] = ci
         predicted[i] = t_best
-    return new_cuts, new_rank, new_comp, predicted
+    if frac is None:
+        return new_cuts, new_rank, new_comp, predicted
+
+    # ---- continuous topk-fraction move (after the triple settles) ----
+    lo, hi = float(frac_bounds[0]), float(frac_bounds[1])
+    new_frac = frac.copy()
+    # forced quality recovery: keep more signal (double, never argmin —
+    # a larger fraction costs wire time by construction)
+    new_frac[below] = np.clip(frac[below] * 2.0, lo, hi)
+    t_keep = np.asarray(price(new_cuts, new_rank, new_comp, new_frac),
+                        np.float64)
+    cand = np.clip(new_frac * 0.5, lo, hi)
+    t_half = np.asarray(price(new_cuts, new_rank, new_comp, cand),
+                        np.float64)
+    # only above-band clients may trade accuracy for time, and only past
+    # the same hysteresis threshold the triple moves use
+    move = above & (cand < new_frac) \
+        & (t_half < (1.0 - min_gain) * t_keep)
+    new_frac = np.where(move, cand, new_frac)
+    predicted = np.where(act, np.where(move, t_half, t_keep), predicted)
+    return new_cuts, new_rank, new_comp, new_frac, predicted

@@ -41,15 +41,19 @@ def round_comm_bytes(model: Model, *, cuts: Sequence[int], batch_size: int,
                      seq_len: int, dtype_bytes: int = 4,
                      compress_ratio: float = 1.0,
                      smashed_compress="none",
-                     smashed_topk_frac: float = 0.1,
+                     smashed_topk_frac=0.1,
                      rank_cut: Optional[Sequence[int]] = None
                      ) -> Dict[str, np.ndarray]:
     """smashed_compress: one compressor name for the whole fleet, or a
     per-client sequence of names (the co-controller's bucket choices).
-    rank_cut: optional (N,) per-client rank-at-cut override — the
-    adapter-channel bytes then charge each client ITS rank at the cut
-    layer instead of the static LoRAConfig.r_cut, so the controller's
-    rank decision is visible on the wire it optimizes."""
+    smashed_topk_frac: the topk keep fraction — one scalar, or a
+    per-client (N,) array when the controller tunes the fraction
+    continuously (state["topk_frac"]); a uniform array equals the
+    scalar path exactly.  rank_cut: optional (N,) per-client
+    rank-at-cut override — the adapter-channel bytes then charge each
+    client ITS rank at the cut layer instead of the static
+    LoRAConfig.r_cut, so the controller's rank decision is visible on
+    the wire it optimizes."""
     arch = model.arch
     lora = arch.lora
     m = arch.model
@@ -63,10 +67,12 @@ def round_comm_bytes(model: Model, *, cuts: Sequence[int], batch_size: int,
     if len(names) != n:
         raise ValueError(f"smashed_compress sequence has {len(names)} "
                          f"entries for {n} clients")
+    fracs = np.broadcast_to(
+        np.asarray(smashed_topk_frac, np.float64), (n,))
     wire = np.array([smashed_lib.wire_bytes(
         nm, batch=batch_size, seq=seq_len, d_model=m.d_model,
-        dtype_bytes=dtype_bytes, topk_frac=smashed_topk_frac)
-        for nm in names], np.float64)
+        dtype_bytes=dtype_bytes, topk_frac=float(fr))
+        for nm, fr in zip(names, fracs)], np.float64)
     smashed_up = wire.copy()
     smashed_down = wire.copy()
 

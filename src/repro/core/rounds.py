@@ -91,10 +91,13 @@ def _optimizer_of(arch: ArchConfig):
                           grad_clip=t.grad_clip)
 
 
-def _cut_boundary(smasher, buckets, choice, cuts, residual=None):
+def _cut_boundary(smasher, buckets, choice, cuts, residual=None,
+                  topk_frac=None):
     """Pick the cut-boundary hook: the per-client bucket selector when the
     co-controller is on (buckets + state["smashed_choice"]), else the
-    single configured compressor (optionally with EF residual)."""
+    single configured compressor (optionally with EF residual).
+    topk_frac ((N,) float32 from state["topk_frac"], bucket path only)
+    makes the topk bucket's keep fraction per-client data."""
     if buckets is not None:
         if choice is None:
             raise ValueError(
@@ -103,7 +106,13 @@ def _cut_boundary(smasher, buckets, choice, cuts, residual=None):
         if residual is not None:
             raise ValueError("smashed error feedback does not compose "
                              "with per-client compressor buckets")
-        return smashed_lib.make_multi_boundary(buckets, cuts, choice)
+        return smashed_lib.make_multi_boundary(buckets, cuts, choice,
+                                               topk_frac=topk_frac)
+    if topk_frac is not None:
+        raise ValueError(
+            "state['topk_frac'] (the continuous topk knob) needs the "
+            "co-controller's compressor buckets; the single-compressor "
+            "path keeps its static topk_frac")
     return smashed_lib.make_boundary(smasher, cuts, residual=residual)
 
 
@@ -258,7 +267,8 @@ def make_train_step(model: Model, *, policy: ShardingPolicy = NO_SHARDING,
         wl = wl / jnp.maximum(jnp.sum(wl), 1e-9)
         boundary = _cut_boundary(smasher, buckets,
                                  state.get("smashed_choice"), cuts,
-                                 residual=sm_ef)
+                                 residual=sm_ef,
+                                 topk_frac=state.get("topk_frac"))
 
         def loss_fn(cad_, sad_, mb):
             eff = split.merge_adapters(model, cad_, sad_, cuts,
@@ -438,6 +448,7 @@ def _make_local_steps_step(model: Model, opt, smasher, *, policy, remat,
         cuts = state["cuts"]
         rank_cut = state.get("rank_cut")
         choice = state.get("smashed_choice")
+        tfrac = state.get("topk_frac")
         budgets = state["step_budgets"]
         sm_ef = state.get("smashed_ef")
         has_ef = sm_ef is not None
@@ -460,7 +471,7 @@ def _make_local_steps_step(model: Model, opt, smasher, *, policy, remat,
             wl = weights * step_act
             wl = wl / jnp.maximum(jnp.sum(wl), 1e-9)
             boundary = _cut_boundary(smasher, buckets, choice, cuts,
-                                     residual=ef_c)
+                                     residual=ef_c, topk_frac=tfrac)
 
             def loss_fn(cad_, sad_):
                 eff = split.merge_adapters(model, cad_, sad_, cuts,
@@ -582,7 +593,8 @@ def _make_async_step(model: Model, opt, smasher, *, policy, remat,
         wl = wl / jnp.maximum(jnp.sum(wl), 1e-9)
         boundary = _cut_boundary(smasher, buckets,
                                  state.get("smashed_choice"), cuts,
-                                 residual=sm_ef)
+                                 residual=sm_ef,
+                                 topk_frac=state.get("topk_frac"))
         # this tick is the finisher's (buffer_steps+1)-th local step since
         # its last flush: 1/K_i server-gradient discount (see
         # make_train_step).  Exactly 1.0 right after a flush, so an
@@ -773,19 +785,32 @@ def with_smashed_choice(state: Params, index: int = 0) -> Params:
     return state
 
 
+def with_topk_frac(state: Params, frac: float) -> Params:
+    """Attach the co-controller's per-client continuous topk keep
+    fraction ((N,) float32, initialized uniform).  Once present, the
+    bucket cut boundary runs its topk bucket at each client's own
+    fraction (smashed.make_multi_boundary topk_frac) — the fraction is
+    data the controller moves without recompiling."""
+    state = dict(state)
+    n = state["cuts"].shape[0]
+    state["topk_frac"] = jnp.full((n,), float(frac), jnp.float32)
+    return state
+
+
 def prepare_state(state: Params, *, max_local_steps: int = 1,
                   async_buffer: bool = False, rank_cut=None,
-                  smashed_choice=None, edge_groups: int = 1) -> Params:
+                  smashed_choice=None, topk_frac=None,
+                  edge_groups: int = 1) -> Params:
     """Attach every scheduler-conditional state leaf in one place —
     the single source of truth for the engine's state template, shared
     by SplitFTSystem and the cell builders so the two paths can never
     drift (a mismatch only surfaces later as a restore()/eval_shape
     template error).
 
-    rank_cut / smashed_choice: initial per-client rank-at-cut and
-    compressor-bucket index for the adaptive co-controller (None leaves
-    the static policy in force — the pre-controller template,
-    bit-exact)."""
+    rank_cut / smashed_choice / topk_frac: initial per-client
+    rank-at-cut, compressor-bucket index, and continuous topk keep
+    fraction for the adaptive co-controller (None leaves the static
+    policy in force — the pre-controller template, bit-exact)."""
     if max_local_steps > 1:
         state = with_step_budgets(state)
     if async_buffer:
@@ -798,6 +823,8 @@ def prepare_state(state: Params, *, max_local_steps: int = 1,
         state = with_rank_cut(state, rank_cut)
     if smashed_choice is not None:
         state = with_smashed_choice(state, smashed_choice)
+    if topk_frac is not None:
+        state = with_topk_frac(state, topk_frac)
     if edge_groups > 1:
         state = with_edge_assign(state, edge_groups)
     return state

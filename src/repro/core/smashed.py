@@ -64,6 +64,26 @@ def straight_through(fn: Callable) -> Callable:
     return f
 
 
+def straight_through2(fn: Callable) -> Callable:
+    """`straight_through` for a two-operand fn(x, aux), where aux (e.g.
+    the traced per-client topk keep fraction) parameterizes the
+    compressor but carries no gradient of its own: the VJP compresses
+    the cotangent with the same fn at the same aux."""
+
+    @jax.custom_vjp
+    def f(x, aux):
+        return fn(x, aux)
+
+    def fwd(x, aux):
+        return fn(x, aux), aux
+
+    def bwd(aux, g):
+        return (fn(g, aux), None)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
 # ---------------------------------------------------------------------------
 # compressor functions (x: (..., d); leading axis = message/client when 3D+)
 
@@ -87,6 +107,27 @@ def _topk_sparsify(x, frac: float):
     k = max(1, int(d * frac))
     av = jnp.abs(x.astype(jnp.float32))
     kth = jax.lax.top_k(av, k)[0][..., -1:]
+    return jnp.where(av >= kth, x, jnp.zeros((), x.dtype))
+
+
+def _topk_sparsify_frac(x, frac):
+    """`_topk_sparsify` with a TRACED keep fraction — the co-controller's
+    continuous knob.  frac is a scalar or a per-client (N,) array
+    broadcasting against x's leading client axis; k = clip(floor(d *
+    frac), 1, d) matches the static path's `int(d * frac)` truncation,
+    and the k-th-largest threshold is a well-defined VALUE, so a uniform
+    traced frac equal to the static topk_frac reproduces the static
+    compressor bit-for-bit (pinned in tests).  Implementation: one
+    descending sort along d plus a per-row gather at k-1 — k varies per
+    client, so lax.top_k's static k cannot be used."""
+    d = x.shape[-1]
+    frac = jnp.asarray(frac, jnp.float32)
+    k = jnp.clip(jnp.floor(d * frac).astype(jnp.int32), 1, d)
+    k = k.reshape(k.shape + (1,) * (x.ndim - 1 - k.ndim))
+    av = jnp.abs(x.astype(jnp.float32))
+    sv = jnp.flip(jnp.sort(av, axis=-1), axis=-1)
+    idx = jnp.broadcast_to(k - 1, av.shape[:-1])[..., None]
+    kth = jnp.take_along_axis(sv, idx, axis=-1)
     return jnp.where(av >= kth, x, jnp.zeros((), x.dtype))
 
 
@@ -211,7 +252,7 @@ def make_boundary(compressor: Optional[SmashedCompressor], cuts,
     return ef_boundary
 
 
-def make_multi_boundary(compressors, cuts, choice):
+def make_multi_boundary(compressors, cuts, choice, topk_frac=None):
     """Boundary hook with a *per-client compressor choice* — the
     co-controller's third knob.
 
@@ -226,11 +267,22 @@ def make_multi_boundary(compressors, cuts, choice):
     symmetric per client.  Error feedback is not supported here — the EF
     residual is sized for one compressor's remainder semantics (see
     make_boundary); the system layer rejects smashed_ef with bucket
-    search."""
+    search.
+
+    topk_frac (optional, (N,) float32 from state["topk_frac"]) makes the
+    topk bucket's keep fraction *per-client data* — the continuous knob
+    the co-controller tunes alongside the discrete triple.  The topk
+    bucket then runs `_topk_sparsify_frac` at each client's own
+    fraction; a uniform fraction equal to the bucket's static topk_frac
+    is the static path bit-for-bit."""
     if all(c is None for c in compressors):
         return None
     cut_ids = jnp.asarray(cuts) - 1
     idx = jnp.asarray(choice)
+    dyn_topk = None
+    if topk_frac is not None:
+        frac = jnp.asarray(topk_frac, jnp.float32)
+        dyn_topk = straight_through2(_topk_sparsify_frac)
 
     def boundary(x, fid):
         sel = (cut_ids == fid)
@@ -242,7 +294,10 @@ def make_multi_boundary(compressors, cuts, choice):
                     continue
                 m = (sel & (idx == k)).reshape(
                     (-1,) + (1,) * (op.ndim - 1))
-                out = jnp.where(m, c.apply(op), out)
+                y = (dyn_topk(op, frac)
+                     if (dyn_topk is not None and c.name == "topk")
+                     else c.apply(op))
+                out = jnp.where(m, y, out)
             return out
 
         return jax.lax.cond(jnp.any(sel), comp, lambda op: op, x)

@@ -73,6 +73,7 @@ from repro.data.tokenizer import HashTokenizer
 from repro.models.common import NO_SHARDING
 from repro.models.model import Model, build_model
 from repro.runtime import straggler
+from repro.runtime import timemodel
 from repro.runtime import traces as traces_lib
 from repro.runtime.elastic import ClientPool
 from repro.runtime.population import CohortSampler, PopulationStore
@@ -114,6 +115,11 @@ class SystemConfig:
     jitter_sigma: Optional[float] = None     # 0s = deterministic fleet
     bw_mean: Optional[float] = None          # mean link bandwidth (B/s);
                                              # inf = zero wire time
+    client_flops_per_s: Optional[float] = None  # reference client device
+                                                # throughput (FLOP/s) the
+                                                # compute phase divides
+                                                # by; None -> the
+                                                # phase_times default
     server_flops_per_s: Optional[float] = None  # >0 charges the server
                                                 # compute phase too
     server_ingest_bw: Optional[float] = None  # >0 charges the server's
@@ -154,6 +160,28 @@ class SystemConfig:
                                        # "diurnal:amp=0.8+markov"
                                        # (traces.make_trace_gen);
                                        # mutually exclusive with trace
+    time_source: Optional[str] = None  # controller pricing source
+                                       # (runtime/timemodel.py): analytic
+                                       # | trace | measured; None ->
+                                       # trace when a trace is installed,
+                                       # else analytic (both bitwise with
+                                       # the pre-pricer clock)
+    ewma_alpha: float = 0.3            # measured: EWMA smoothing of the
+                                       # observed/predicted phase ratios
+    model_seed: Optional[int] = None   # price candidates from a
+                                       # SpeedModel drawn at this seed
+                                       # instead of the clock's (the
+                                       # mis-specification testbed);
+                                       # None -> the clock itself
+    record_trace: Optional[str] = None  # dump the run's observed
+                                        # per-phase factors to this path
+                                        # as FileTrace JSON when run()
+                                        # returns
+    continuous_topk: Optional[bool] = None  # co: search the topk keep
+                                            # fraction continuously
+                                            # (state["topk_frac"]);
+                                            # None -> arch.split
+                                            # .continuous_topk
 
 
 class SplitFTSystem:
@@ -268,6 +296,58 @@ class SplitFTSystem:
         elif self.sys.trace_gen:
             self.speed.trace = traces_lib.make_trace_gen(
                 self.sys.trace_gen, seed=seed)
+
+        # ---- time-model layer (runtime/timemodel.py) ----
+        # charge vs predict split: the clock always charges the jittered
+        # SpeedModel; time_source selects what the controller's
+        # predictions are built from
+        src = self.sys.time_source
+        if src is not None and src not in timemodel.TIME_SOURCES:
+            raise ValueError(f"unknown time_source {src!r}; known: "
+                             f"{timemodel.TIME_SOURCES}")
+        if self.speed is None:
+            if src not in (None, "analytic"):
+                raise ValueError(
+                    f"time_source={src!r} needs the simulated clock's "
+                    "timing hooks, but no SpeedModel is attached — "
+                    "there are no observed phase times to learn from; "
+                    "set straggler_sim=True, a speed-model scheduler, "
+                    "or a trace")
+            if self.sys.record_trace:
+                raise ValueError(
+                    "record_trace needs the simulated clock's timing "
+                    "hooks, but no SpeedModel is attached — there are "
+                    "no phase times to record; set straggler_sim=True, "
+                    "a speed-model scheduler, or a trace")
+            if self.sys.model_seed is not None:
+                raise ValueError(
+                    "model_seed mis-specifies the pricing SpeedModel, "
+                    "but no SpeedModel is attached; set "
+                    "straggler_sim=True first")
+        if src is None:
+            src = ("trace" if (self.speed is not None
+                               and self.speed.trace is not None)
+                   else "analytic")
+        if src == "trace" and (self.speed is None
+                               or self.speed.trace is None):
+            raise ValueError(
+                "time_source='trace' prices candidates at the trace "
+                "window, but no trace is installed; set trace/trace_gen "
+                "(or use analytic/measured)")
+        self.time_source = src
+        model_sm = None
+        if self.sys.model_seed is not None \
+                and int(self.sys.model_seed) != seed:
+            model_sm = SpeedModel(n, seed=int(self.sys.model_seed),
+                                  **speed_kw)
+            model_sm.trace = self.speed.trace
+        self.pricer = (timemodel.make_pricer(
+            src, self.speed, model_sm, ewma_alpha=self.sys.ewma_alpha)
+            if self.speed is not None else None)
+        self.recorder = (timemodel.TraceRecorder(self.speed)
+                         if self.sys.record_trace else None)
+        self._observing = (src == "measured"
+                           or self.recorder is not None)
         self.sim_clock = 0.0           # cumulative simulated seconds
 
         # ---- model/state (engine) ----
@@ -320,6 +400,19 @@ class SplitFTSystem:
                 nm, batch=arch.train.batch_size, seq=arch.train.seq_len,
                 d_model=arch.model.d_model,
                 topk_frac=self.smashed_topk_frac)))
+        self.continuous_topk = (arch.split.continuous_topk
+                                if self.sys.continuous_topk is None
+                                else self.sys.continuous_topk)
+        if self.continuous_topk:
+            if self.controller != "co":
+                raise ValueError(
+                    "continuous_topk is a co-controller search knob; "
+                    f"set controller='co' (got {self.controller!r})")
+            if "topk" not in self.comp_buckets:
+                raise ValueError(
+                    "continuous_topk tunes the topk compressor's keep "
+                    "fraction, but 'topk' is not in the compressor "
+                    f"buckets {self.comp_buckets}")
 
         # ---- hierarchical aggregation + server-step normalization ----
         self.num_edges = max(1, (arch.split.edge_groups
@@ -347,6 +440,8 @@ class SplitFTSystem:
             async_buffer=is_async,
             rank_cut=init_rank if co else None,
             smashed_choice=init_choice if co else None,
+            topk_frac=(self.smashed_topk_frac
+                       if (co and self.continuous_topk) else None),
             edge_groups=self.num_edges)
         self.train_step = rounds.make_train_step(
             self.model, policy=policy, remat=arch.train.remat,
@@ -451,6 +546,9 @@ class SplitFTSystem:
             # the CLIENT, so they must follow the pid into its slot
             self.speed.jitter_seeds = np.asarray(js, np.int64)
             self.speed.trace_pids = pids.copy()
+            # the pricer's model draws (and measured state keying)
+            # follow the cohort too — a no-op when model is the clock
+            self.pricer.install_cohort(pids)
         self._comm_cache = None
         self._times_cache.clear()
         self._cohort_scattered = False
@@ -528,11 +626,18 @@ class SplitFTSystem:
         return (None if rank is None else np.asarray(rank),
                 None if choice is None else np.asarray(choice))
 
+    def _state_frac(self) -> Optional[np.ndarray]:
+        """The co-controller's per-client continuous topk keep fraction
+        from round state, None under the static (bucket-only) policy."""
+        frac = self.state.get("topk_frac")
+        return None if frac is None else np.asarray(frac, np.float64)
+
     def _round_comm(self, cuts_np: np.ndarray, rank_np=None,
-                    choice_np=None) -> Dict[str, np.ndarray]:
-        """Per-client comm bytes for a (cut, rank, compressor)
+                    choice_np=None, frac_np=None
+                    ) -> Dict[str, np.ndarray]:
+        """Per-client comm bytes for a (cut, rank, compressor, frac)
         assignment — computed ONCE per round for the current state (and
-        once per candidate triple when the co-controller prices moves),
+        once per candidate when the co-controller prices moves),
         shared by the straggler model and the round record."""
         arch = self.arch
         names = (self.smashed_compress if choice_np is None
@@ -542,7 +647,8 @@ class SplitFTSystem:
             batch_size=arch.train.batch_size,
             seq_len=arch.train.seq_len,
             smashed_compress=names,
-            smashed_topk_frac=self.smashed_topk_frac,
+            smashed_topk_frac=(self.smashed_topk_frac
+                               if frac_np is None else frac_np),
             rank_cut=rank_np)
 
     @property
@@ -550,6 +656,30 @@ class SplitFTSystem:
         arch = self.arch
         return 12 * arch.model.d_model ** 2 \
             * arch.train.batch_size * arch.train.seq_len
+
+    def _phase_kwargs(self, r: int, cuts_np: np.ndarray,
+                      cb: Dict[str, np.ndarray],
+                      start_time: Optional[float] = None
+                      ) -> Dict[str, Any]:
+        """The SpeedModel.phase_times argument set for one assignment —
+        shared verbatim by the charged clock, the pricer's predictions,
+        and the telemetry baselines, so all three price the SAME bytes
+        and layer split."""
+        ea = (np.asarray(self.state["edge_assign"])
+              if (self.num_edges > 1 and "edge_assign" in self.state)
+              else None)
+        kw = dict(
+            cuts=cuts_np, flops_per_layer=self._flops_layer,
+            smashed_bytes=cb["smashed_up"],
+            smashed_down_bytes=cb["smashed_down"],
+            adapter_bytes=cb["adapter_up"], round_idx=r,
+            server_layers=self.model.num_flat_layers - cuts_np,
+            edge_assign=ea, num_edges=self.num_edges,
+            start_time=(self.sim_clock if start_time is None
+                        else start_time))
+        if self.sys.client_flops_per_s is not None:
+            kw["ref_flops_per_s"] = float(self.sys.client_flops_per_s)
+        return kw
 
     def _round_phases(self, r: int, cuts_np: np.ndarray,
                       cb: Dict[str, np.ndarray], *,
@@ -559,37 +689,56 @@ class SplitFTSystem:
         """(5, N) per-phase durations of one local step (or None without
         a speed model): comm.py's per-channel byte split maps straight
         onto the wire phases (smashed -> f2/f4, adapter -> sync).
-        jitter=False gives the EXPECTED durations — the co-controller's
-        pricing view of the exact same clock.  start_time positions the
-        launch on the simulated clock for trace-driven heterogeneity
-        (None = now, i.e. self.sim_clock)."""
+        jitter=True is the CHARGED clock (pricer.charge — jitter + trace
+        factors); jitter=False is the controller's PREDICTION
+        (pricer.predict — analytic / trace-window / measured-EWMA per
+        SystemConfig.time_source).  start_time positions the launch on
+        the simulated clock for trace-driven heterogeneity (None = now,
+        i.e. self.sim_clock)."""
         if self.speed is None:
             return None
-        ea = (np.asarray(self.state["edge_assign"])
-              if (self.num_edges > 1 and "edge_assign" in self.state)
-              else None)
-        return self.speed.phase_times(
-            cuts=cuts_np, flops_per_layer=self._flops_layer,
-            smashed_bytes=cb["smashed_up"],
-            smashed_down_bytes=cb["smashed_down"],
-            adapter_bytes=cb["adapter_up"], round_idx=r,
-            server_layers=self.model.num_flat_layers - cuts_np,
-            edge_assign=ea, num_edges=self.num_edges,
-            jitter=jitter,
-            start_time=(self.sim_clock if start_time is None
-                        else start_time))
+        kw = self._phase_kwargs(r, cuts_np, cb, start_time)
+        if jitter:
+            return self.pricer.charge(**kw)
+        return self.pricer.predict(**kw)
+
+    def _observe_phases(self, r: int, observed: np.ndarray, mask,
+                        cb: Dict[str, np.ndarray], t0: float):
+        """Feed one charged (5, N) phase matrix back to the telemetry
+        consumers: the measured pricer's EWMA updates against the
+        MODEL's stationary baseline (a mis-specified model is exactly
+        what the ratios correct), while the trace recorder divides by
+        the CLOCK's stationary baseline (recorded factors multiply the
+        clock's own draws on replay).  mask selects the clients that
+        actually ran; t0 is the launch instant on the simulated
+        clock."""
+        if not self._observing:
+            return
+        cuts_np = np.asarray(self.state["cuts"])
+        kw = self._phase_kwargs(r, cuts_np, cb, t0)
+        mask = np.asarray(mask, bool)
+        observed = np.asarray(observed, np.float64)
+        if self.pricer.source == "measured":
+            self.pricer.observe(observed, mask,
+                                self.pricer.model_baseline(**kw))
+        if self.recorder is not None:
+            self.recorder.observe(observed,
+                                  self.pricer.clock_baseline(**kw),
+                                  mask, t0)
 
     def predict_round_times(self, r: int, cuts, rank_cut=None,
-                            comp_idx=None) -> np.ndarray:
+                            comp_idx=None, topk_frac=None) -> np.ndarray:
         """(N,) predicted per-client one-step round time for a candidate
-        (cut, rank-at-cut, compressor-index) assignment — the
-        co-controller's objective.  Delegates to the SAME
-        comm.round_comm_bytes + SpeedModel.phase_times the simulated
-        clock charges, minus the jitter draw, so with jitter_sigma == 0
-        prediction and simulation coincide exactly.  Under a trace the
-        candidate is priced at the CURRENT trace window (phase_times
-        defaults start_time to self.sim_clock) — the controller must
-        answer "what would this assignment cost *now*", not under the
+        (cut, rank-at-cut, compressor-index, topk-frac) assignment — the
+        co-controller's objective.  Bytes come from the SAME
+        comm.round_comm_bytes the simulated clock charges; durations
+        come from the configured pricer's `predict` (jitter-free:
+        analytic stationary model, trace-window factors, or
+        measured-EWMA-corrected — SystemConfig.time_source).  With
+        time_source='analytic'/'trace' and jitter_sigma == 0 prediction
+        and simulation coincide exactly; under 'trace' the candidate is
+        priced at the CURRENT trace window — the controller must answer
+        "what would this assignment cost *now*", not under the
         stationary mean.  Serial phase sum; under overlap_comm, the
         steady-state per-step time of the double-buffered pipeline
         (makespan of K steps / K)."""
@@ -597,7 +746,9 @@ class SplitFTSystem:
         cb = self._round_comm(
             cuts_np,
             None if rank_cut is None else np.asarray(rank_cut, int),
-            None if comp_idx is None else np.asarray(comp_idx, int))
+            None if comp_idx is None else np.asarray(comp_idx, int),
+            (self._state_frac() if topk_frac is None
+             else np.asarray(topk_frac, np.float64)))
         phases = self._round_phases(r, cuts_np, cb, jitter=False)
         if self.overlap_comm:
             k = max(2, self.scheduler.max_steps)
@@ -631,7 +782,8 @@ class SplitFTSystem:
         avail = self._trace_availability()   # may advance sim_clock
         cuts_np = np.asarray(self.state["cuts"])
         rank_np, choice_np = self._state_policy()
-        cb = self._round_comm(cuts_np, rank_np, choice_np)
+        cb = self._round_comm(cuts_np, rank_np, choice_np,
+                              self._state_frac())
         phases = self._round_phases(r, cuts_np, cb)
         times = (None if phases is None
                  else straggler.serial_step_times(phases))
@@ -660,6 +812,9 @@ class SplitFTSystem:
         if "smashed_choice" in self.state:
             rec["smashed_choice"] = np.asarray(
                 self.state["smashed_choice"]).copy()
+        if "topk_frac" in self.state:
+            rec["topk_frac"] = np.asarray(
+                self.state["topk_frac"]).copy()
         if plan.times is not None:
             rec["round_time_sim"] = plan.times
             rec["sim_time"] = plan.sim_time
@@ -708,15 +863,33 @@ class SplitFTSystem:
         active = self.pool.active.astype(np.float64)
         if self.controller == "co":
             rank_np, choice_np = self._state_policy()
-            new_cuts, new_rank, new_comp, pred = adaptive.co_adjust(
-                np.asarray(self.state["cuts"]), rank_np, choice_np,
-                accs, self.arch.split, self.model.num_flat_layers,
-                rank_buckets=self.rank_buckets,
-                num_compressors=len(self.comp_buckets),
-                price=lambda c, rk, ci: self.predict_round_times(
-                    r + 1, c, rk, ci),
-                active=active, dead_band=self.acc_dead_band,
-                min_gain=self.min_gain, round_times=times)
+            frac_np = self._state_frac()
+            if frac_np is None:
+                new_cuts, new_rank, new_comp, pred = adaptive.co_adjust(
+                    np.asarray(self.state["cuts"]), rank_np, choice_np,
+                    accs, self.arch.split, self.model.num_flat_layers,
+                    rank_buckets=self.rank_buckets,
+                    num_compressors=len(self.comp_buckets),
+                    price=lambda c, rk, ci: self.predict_round_times(
+                        r + 1, c, rk, ci),
+                    active=active, dead_band=self.acc_dead_band,
+                    min_gain=self.min_gain, round_times=times)
+            else:
+                new_cuts, new_rank, new_comp, new_frac, pred = \
+                    adaptive.co_adjust(
+                        np.asarray(self.state["cuts"]), rank_np,
+                        choice_np, accs, self.arch.split,
+                        self.model.num_flat_layers,
+                        rank_buckets=self.rank_buckets,
+                        num_compressors=len(self.comp_buckets),
+                        price=lambda c, rk, ci, fr:
+                            self.predict_round_times(r + 1, c, rk, ci,
+                                                     topk_frac=fr),
+                        active=active, dead_band=self.acc_dead_band,
+                        min_gain=self.min_gain, round_times=times,
+                        topk_frac=frac_np)
+                self.state["topk_frac"] = jnp.asarray(new_frac,
+                                                      jnp.float32)
             self.state["cuts"] = jnp.asarray(new_cuts, jnp.int32)
             self.state["rank_cut"] = jnp.asarray(new_rank, jnp.int32)
             self.state["smashed_choice"] = jnp.asarray(new_comp,
@@ -752,10 +925,15 @@ class SplitFTSystem:
     def run(self, num_rounds: int, *, log_every: int = 10,
             callback: Optional[Callable] = None) -> List[Dict[str, Any]]:
         if self.scheduler.name == "async":
-            return self._run_async(num_rounds, log_every=log_every,
+            hist = self._run_async(num_rounds, log_every=log_every,
                                    callback=callback)
-        return self._run_barrier(num_rounds, log_every=log_every,
-                                 callback=callback)
+        else:
+            hist = self._run_barrier(num_rounds, log_every=log_every,
+                                     callback=callback)
+        if self.recorder is not None:
+            # cumulative: a second run() re-dumps the extended recording
+            self.recorder.dump(self.sys.record_trace)
+        return hist
 
     def _run_barrier(self, num_rounds: int, *, log_every: int = 10,
                      callback: Optional[Callable] = None
@@ -769,6 +947,7 @@ class SplitFTSystem:
         for r in range(start, start + num_rounds):
             self._pop_gather()         # population mode: next cohort in
             plan, cb = self._plan_round(r)
+            t0 = self.sim_clock        # the round's launch instant
             batch = (self._train_batch(r) if k == 1
                      else self._train_batches(r, k))
             weights = jnp.asarray(self.combined_weights(), jnp.float32)
@@ -781,6 +960,10 @@ class SplitFTSystem:
                 self.base_params, self.state, batch, weights, active_j,
                 lr_c, lr_s)
             self.sim_clock += plan.sim_time
+            if plan.phases is not None:
+                # telemetry feedback: the plan's charged phase matrix is
+                # exactly what the clock just billed this round
+                self._observe_phases(r, plan.phases, plan.active, cb, t0)
 
             rec = self._round_record(r, metrics, plan, cb)
             self._finish_round(r, rec, log_every, callback)
@@ -795,12 +978,14 @@ class SplitFTSystem:
         per-aggregation C3 epilogue, but ticks fire many times per
         round."""
         rank_np, choice_np = self._state_policy()
+        frac_np = self._state_frac()
         key = (cuts_np.tobytes(),
                None if rank_np is None else rank_np.tobytes(),
-               None if choice_np is None else choice_np.tobytes())
+               None if choice_np is None else choice_np.tobytes(),
+               None if frac_np is None else frac_np.tobytes())
         if self._comm_cache is None or self._comm_cache[0] != key:
-            self._comm_cache = (key, self._round_comm(cuts_np, rank_np,
-                                                      choice_np))
+            self._comm_cache = (key, self._round_comm(
+                cuts_np, rank_np, choice_np, frac_np))
         return self._comm_cache[1]
 
     def _cached_phases(self, round_idx: int, cuts_np: np.ndarray,
@@ -814,12 +999,14 @@ class SplitFTSystem:
         under a non-stationary clock (and collapses to one window —
         key None/0 — without a trace)."""
         rank_np, choice_np = self._state_policy()
+        frac_np = self._state_frac()
         start = self.sim_clock if start_time is None else start_time
         trace = None if self.speed is None else self.speed.trace
         win = None if trace is None else trace.window(start)
         key = (round_idx, win, cuts_np.tobytes(),
                None if rank_np is None else rank_np.tobytes(),
-               None if choice_np is None else choice_np.tobytes())
+               None if choice_np is None else choice_np.tobytes(),
+               None if frac_np is None else frac_np.tobytes())
         p = self._times_cache.get(key)
         if p is None:
             if len(self._times_cache) > 64:   # launches only grow; old
@@ -1019,8 +1206,16 @@ class SplitFTSystem:
             # the flush record reports the serial step time each client
             # actually experienced at ITS launch index — not a fresh
             # full-fleet draw at the aggregation-round index
-            sched.last_times[i] = self._serial_time(
-                i, int(sched.launches[i]), cuts_np, cb, t_now)
+            launch = int(sched.launches[i])
+            ph = self._cached_phases(launch, cuts_np, cb, t_now)
+            sched.last_times[i] = float(
+                straggler.serial_step_times(ph)[i])
+            if self._observing:
+                # telemetry feedback: this finisher's charged phase
+                # column at its own launch index
+                m = np.zeros(ph.shape[1], bool)
+                m[i] = True
+                self._observe_phases(launch, ph, m, cb, t_now)
             sched.launches[i] += 1
         if aggregated:
             # this tick's finishers just received the new global model;
@@ -1178,6 +1373,12 @@ class SplitFTSystem:
             # window), so the cursor is only a cache — but restoring it
             # spares the resumed run an O(t/step) replay on first query
             meta["trace"] = self.speed.trace.state_dict()
+        if self.pricer is not None:
+            tm = self.pricer.state_dict()
+            if tm:
+                # measured-EWMA telemetry (pid-keyed ratios): resume ==
+                # straight run, bitwise
+                meta["timemodel"] = tm
         if self.store is not None:
             # cohort rows back to their slots first so the slot map is
             # the single source of per-pid truth in the checkpoint
@@ -1268,6 +1469,8 @@ class SplitFTSystem:
         if self.speed is not None and self.speed.trace is not None \
                 and meta.get("trace") is not None:
             self.speed.trace.load_state_dict(meta["trace"])
+        if self.pricer is not None and meta.get("timemodel") is not None:
+            self.pricer.load_state_dict(meta["timemodel"])
         return True
 
     # ------------------------------------------------------------------

@@ -106,7 +106,41 @@ def build_parser() -> argparse.ArgumentParser:
                     help="--controller co: relative predicted-makespan "
                          "improvement required before moving a "
                          "client's triple (hysteresis)")
+    ap.add_argument("--continuous-topk", action="store_true",
+                    default=None,
+                    help="--controller co: tune the topk keep fraction "
+                         "continuously per client (needs 'topk' in "
+                         "--compressor-buckets)")
     ap.add_argument("--straggler-sim", action="store_true")
+    ap.add_argument("--client-flops-per-s", type=float, default=None,
+                    help="reference client device throughput (FLOP/s) "
+                         "for the simulated compute phase; default: the "
+                         "SpeedModel's 5e12")
+    ap.add_argument("--jitter-sigma", type=float, default=None,
+                    help="per-round lognormal jitter sigma on the "
+                         "simulated clock (0 = deterministic: predicted "
+                         "== simulated times)")
+    ap.add_argument("--time-source", default=None,
+                    choices=[None, "analytic", "trace", "measured"],
+                    help="controller pricing source (runtime.timemodel): "
+                         "'analytic' = the stationary SpeedModel; "
+                         "'trace' = analytic x the trace's factors at "
+                         "the current window; 'measured' = analytic "
+                         "corrected by a per-client per-phase EWMA of "
+                         "observed durations; default: trace when a "
+                         "trace is installed, else analytic")
+    ap.add_argument("--ewma-alpha", type=float, default=0.3,
+                    help="--time-source measured: EWMA smoothing factor "
+                         "for the observed/predicted phase ratios")
+    ap.add_argument("--model-seed", type=int, default=None,
+                    help="price candidates from a SpeedModel drawn at "
+                         "this seed instead of the clock's (deliberate "
+                         "mis-specification testbed; 'measured' learns "
+                         "the correction, 'analytic' cannot)")
+    ap.add_argument("--record-trace", default=None, metavar="PATH",
+                    help="dump the run's observed per-phase factors to "
+                         "PATH as a runtime.traces FileTrace JSON, "
+                         "replayable via --trace")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="replay a recorded heterogeneity trace file "
                          "(runtime.traces JSON: per-window speed/"
@@ -188,7 +222,14 @@ def main(argv=None):
         compressor_buckets=args.compressor_buckets,
         acc_dead_band=args.acc_dead_band,
         min_gain=args.min_gain,
+        continuous_topk=args.continuous_topk,
         straggler_sim=args.straggler_sim,
+        client_flops_per_s=args.client_flops_per_s,
+        jitter_sigma=args.jitter_sigma,
+        time_source=args.time_source,
+        ewma_alpha=args.ewma_alpha,
+        model_seed=args.model_seed,
+        record_trace=args.record_trace,
         trace=args.trace,
         trace_gen=args.trace_gen,
         population=args.population,

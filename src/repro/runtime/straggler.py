@@ -116,7 +116,8 @@ class SpeedModel:
                     edge_assign: Optional[Sequence[int]] = None,
                     num_edges: int = 1,
                     jitter: bool = True,
-                    start_time: float = 0.0) -> np.ndarray:
+                    start_time: float = 0.0,
+                    apply_trace: bool = True) -> np.ndarray:
         """(5, N) per-client phase durations for one local step.
 
         Rows follow `PHASES`: client compute (cut_i layers of
@@ -153,7 +154,9 @@ class SpeedModel:
         draws are multiplied by the trace's factors at that instant
         (piecewise-constant per trace window).  Without a trace — or
         with a constant trace of 1.0 factors — the clock is the
-        stationary model bitwise."""
+        stationary model bitwise.  apply_trace=False ignores the
+        installed trace entirely (the stationary view the time-model
+        layer's analytic pricer and EWMA baselines are built on)."""
         if jitter:
             if self.jitter_seeds is not None:
                 # pid-keyed: fold the round index into each client's own
@@ -172,7 +175,7 @@ class SpeedModel:
         else:
             jit = np.ones(self.num_clients)
         speed, bandwidth = self.speed, self.bandwidth
-        if self.trace is not None:
+        if self.trace is not None and apply_trace:
             tsp, tbw, _ = self.trace.sample(float(start_time),
                                             self._pids())
             speed = speed * tsp
